@@ -1,0 +1,195 @@
+"""Benchmark harness: one function per paper table/figure + kernel
+microbenchmarks + the dry-run roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Expensive artifacts
+(results/kws_results.json from benchmarks.kws_experiments,
+results/dryrun_baseline.json from repro.launch.dryrun) are loaded if present;
+the table functions degrade to "run benchmarks.kws_experiments first"
+markers instead of silently re-running multi-minute jobs.
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+def _row(name, us, derived):
+    print(f"{name},{us},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Paper tables
+# ---------------------------------------------------------------------------
+
+
+def table2_model() -> None:
+    """Paper Table II: ideal-model accuracy / parameters / model size."""
+    r = _load("kws_results.json")
+    if not r:
+        _row("table2_model", "", "MISSING:run benchmarks.kws_experiments")
+        return
+    t = r["table2"]
+    _row("table2_accuracy", "", f"{t['accuracy']:.4f}(paper:0.9083)")
+    _row("table2_parameters", "", f"{t['parameters']}(paper:125K)")
+    _row("table2_model_bits", "", f"{t['model_bits']}(paper:171K)")
+
+
+def table3_hw_constraints() -> None:
+    """Paper Table III: ideal -> FC-quant -> BN-constraints -> +noise ->
+    +compensation -> +fine-tune."""
+    r = _load("kws_results.json")
+    if not r:
+        _row("table3_hw_constraints", "",
+             "MISSING:run benchmarks.kws_experiments")
+        return
+    t = r["table3"]
+    for key in ("ideal", "fc_quantized", "bn_constraints", "mav_sa_noise",
+                "bias_compensation", "compensation_finetune"):
+        _row(f"table3_{key}", "",
+             f"{t[key]:.4f}(paper:{t['paper'][key]:.4f})")
+
+
+def table4_customization() -> None:
+    """Paper Table IV: customization ablation on the personal set."""
+    r = _load("kws_results.json")
+    if not r:
+        _row("table4_customization", "",
+             "MISSING:run benchmarks.kws_experiments")
+        return
+    t = r["table4"]
+    _row("table4_before_customization", "",
+         f"{t['before_customization']:.4f}")
+    for key in ("baseline_fp", "quantized_naive", "error_scaling", "es_sga",
+                "es_sga_rgp"):
+        _row(f"table4_{key}", "",
+             f"{t[key]:.4f}(paper:{t['paper'][key]:.4f})")
+
+
+def table5_energy() -> None:
+    """Paper Fig 14/Table V: energy/latency/TOPS-W analytical chip model."""
+    from repro.core.energy import kws_chip_report, training_energy_j
+    from repro.models.kws import PAPER_KWS, layer_stats
+
+    stats = layer_stats(PAPER_KWS)
+    for freq, tag in ((1e6, "1MHz"), (1e8, "100MHz")):
+        rep = kws_chip_report(stats, freq_hz=freq)
+        _row(f"table5_energy_per_decision_{tag}", "",
+             f"{rep.energy_j_per_decision * 1e6:.2f}uJ"
+             + ("(paper:~14.3uJ)" if tag == "1MHz" else "(paper:~4.5uJ)"))
+        _row(f"table5_power_{tag}", "",
+             f"{rep.power_w * 1e6:.1f}uW"
+             + ("(paper:89.5uW)" if tag == "1MHz" else "(paper:2833uW)"))
+        _row(f"table5_tops_per_w_{tag}", "",
+             f"{rep.tops_per_w:.1f}(paper:23.6-68)")
+    _row("table5_latency", "", f"{kws_chip_report(stats).latency_s*1e3:.0f}ms"
+         "(paper:160ms@1MHz)")
+    e_train = training_energy_j(num_epochs=1, macs_per_epoch=90 * 586 * 10,
+                                lut_ops=90 * 10, div_ops=90 * 10,
+                                sram_bits=90 * 576 * 8)
+    _row("table5_training_energy_per_epoch", "", f"{e_train*1e6:.1f}uJ")
+
+
+def dryrun_summary() -> None:
+    """Deliverable e/g: the 40-cell x 2-mesh dry-run + roofline terms."""
+    rs = _load("dryrun_baseline.json")
+    if not rs:
+        _row("dryrun", "", "MISSING:run repro.launch.dryrun")
+        return
+    ok = sum(1 for r in rs if r.get("status") == "ok")
+    skip = sum(1 for r in rs if r.get("status") == "skip")
+    err = sum(1 for r in rs if r.get("status") == "error")
+    _row("dryrun_cells", "", f"ok={ok};skip={skip};error={err}")
+    for r in rs:
+        if r.get("status") != "ok" or r.get("multi_pod"):
+            continue
+        ro = r["roofline"]
+        _row(f"roofline_{r['arch']}_{r['shape']}", "",
+             f"dom={ro['dominant']};comp={ro['compute_s']:.4f}s;"
+             f"mem={ro['memory_s']:.4f}s;coll={ro['collective_s']:.4f}s;"
+             f"frac={ro['roofline_fraction']:.3f};"
+             f"frac_serial={ro.get('roofline_fraction_serial', 0):.3f}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenchmarks (CPU interpret mode: correctness-grade timings)
+# ---------------------------------------------------------------------------
+
+
+def _time_us(fn, *args, iters: int = 5) -> float:
+    import jax
+    fn(*args)                      # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernel_bench() -> None:
+    """us/call for each Pallas kernel vs its jnp oracle (interpret mode on
+    CPU measures dispatch+semantics, not TPU perf — the BlockSpecs encode
+    the TPU tiling; see DESIGN.md §3)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.imc_mav import ops as mav_ops
+    from repro.kernels.imc_mav.ref import imc_mav_ref
+    from repro.kernels.int8_matmul.int8_matmul import int8_matmul
+    from repro.kernels.int8_matmul.ref import int8_matmul_ref
+    from repro.kernels.sga_update.sga_update import sga_update
+    from repro.kernels.sga_update.ref import sga_update_ref
+
+    k = jax.random.PRNGKey(0)
+    x = jnp.where(jax.random.bernoulli(k, 0.5, (512, 128)), 1.0, -1.0)
+    w = jnp.where(jax.random.bernoulli(k, 0.5, (128, 128)), 1.0, -1.0)
+    bias = jnp.zeros((128,))
+    flip = jnp.ones((128,))
+    us = _time_us(lambda: mav_ops.mav_matmul(x, w, bias, flip))
+    us_ref = _time_us(jax.jit(lambda: imc_mav_ref(x, w, bias, flip)))
+    _row("kernel_imc_mav_512x128x128", f"{us:.0f}", f"ref_us={us_ref:.0f}")
+
+    xq = jax.random.randint(k, (512, 128), -127, 128, jnp.int8)
+    wq = jax.random.randint(k, (128, 128), -127, 128, jnp.int8)
+    bq = jnp.zeros((128,), jnp.int32)
+    us = _time_us(lambda: int8_matmul(xq, wq, bq, shift=7))
+    us_ref = _time_us(jax.jit(lambda: int8_matmul_ref(xq, wq, bq, shift=7)))
+    _row("kernel_int8_matmul_512x128x128", f"{us:.0f}",
+         f"ref_us={us_ref:.0f}")
+
+    n = 8192
+    wv = jax.random.uniform(k, (n,), minval=-1, maxval=1)
+    gv = jax.random.normal(k, (n,)) * 0.01
+    av = jnp.zeros((n,))
+    us = _time_us(lambda: sga_update(wv, gv, av, lr=1 / 16, g_th=0.078125))
+    us_ref = _time_us(jax.jit(
+        lambda: sga_update_ref(wv, gv, av, 1 / 16, 0.078125)))
+    _row("kernel_sga_update_8192", f"{us:.0f}", f"ref_us={us_ref:.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table2_model()
+    table3_hw_constraints()
+    table4_customization()
+    table5_energy()
+    dryrun_summary()
+    kernel_bench()
+
+
+if __name__ == "__main__":
+    main()

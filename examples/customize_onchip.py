@@ -1,0 +1,58 @@
+"""On-chip customization ablation (the paper's Table IV) on a trained model.
+
+Uses the cached model from benchmarks (results/kws_model.pkl) if present,
+otherwise trains briefly.  Shows each technique's contribution:
+full-precision baseline vs naive-quantized vs +error-scaling vs +SGA vs +RGP.
+
+Run:  PYTHONPATH=src python examples/customize_onchip.py
+"""
+import os
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imc
+from repro.core.onchip_training import (OnChipTrainConfig, head_accuracy,
+                                        quantized_head_finetune)
+from repro.data import audio
+from repro.models import kws as m
+from repro.training import kws as tr
+
+L = 2000
+cfg = m.KWSConfig(sample_len=L)
+pkl = os.path.join(os.path.dirname(__file__), "..", "results",
+                   "kws_model.pkl")
+if os.path.exists(pkl):
+    with open(pkl, "rb") as f:
+        params, state = pickle.load(f)
+    params = jax.tree_util.tree_map(jnp.asarray, params)
+    state = m.KWSState(*[jax.tree_util.tree_map(jnp.asarray, s)
+                         for s in state])
+else:
+    (xtr, ytr), _ = audio.make_gscd_like(train_per_class=24,
+                                         test_per_class=4, length=L)
+    params, state = tr.train_base(
+        xtr, ytr, cfg, tr.TrainConfig(epochs=24, batch_size=80, lr=3e-3))
+
+hw = m.fold_params(params, state, cfg)
+(xp_tr, yp_tr), (xp_te, yp_te) = audio.make_personal(
+    train_per_class=3, test_per_class=6, length=L, accent_shift=0.18)
+f_tr = tr.hw_features(hw, xp_tr, cfg)
+f_te = tr.hw_features(hw, xp_te, cfg)
+print(f"before customization: "
+      f"{tr.evaluate_hw(hw, xp_te, yp_te, cfg):.3f}")
+for name, kw in {
+    "baseline (fp32)": dict(quantized=False),
+    "quantized naive": dict(error_scaling=False, sga=False),
+    "+ error scaling": dict(error_scaling=True, sga=False),
+    "+ SGA": dict(error_scaling=True, sga=True),
+    "+ RGP": dict(error_scaling=True, sga=True, rgp=True),
+}.items():
+    ocfg = OnChipTrainConfig(epochs=600, **kw)
+    w, b = quantized_head_finetune(jnp.asarray(f_tr), jnp.asarray(yp_tr),
+                                   hw.fc_w, hw.fc_b, ocfg)
+    acc = float(head_accuracy(jnp.asarray(f_te), jnp.asarray(yp_te), w, b,
+                              ocfg))
+    print(f"{name:18s}: {acc:.3f}")

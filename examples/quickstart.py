@@ -1,0 +1,55 @@
+"""Quickstart: the paper's pipeline end-to-end at smoke scale (~2 min CPU).
+
+  1. synthesize a keyword corpus,
+  2. train the IMC-aware BNN briefly (annealed binarization),
+  3. fold to the hardware path (in-memory BN grid),
+  4. inject chip noise -> bias compensation,
+  5. customize the classifier head on-chip (error scaling + SGA + RGP).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import imc
+from repro.core.onchip_training import (OnChipTrainConfig, head_accuracy,
+                                        quantized_head_finetune)
+from repro.data import audio
+from repro.models import kws as m
+from repro.training import kws as tr
+
+L = 1000
+cfg = m.KWSConfig(sample_len=L)
+(xtr, ytr), (xte, yte) = audio.make_gscd_like(train_per_class=16,
+                                              test_per_class=6, length=L)
+print("== 1) train (smoke budget) ==")
+tcfg = tr.TrainConfig(epochs=18, batch_size=80, lr=3e-3, log_every=18,
+                      alpha_schedule=((0.35, 2.0), (0.55, 5.0),
+                                      (0.7, 12.0), (1.0, -8.0)))
+params, state = tr.train_base(xtr, ytr, cfg, tcfg)
+
+print("== 2) fold to hardware ==")
+hw = m.fold_params(params, state, cfg)
+print("   hw accuracy:", tr.evaluate_hw(hw, xte, yte, cfg))
+
+print("== 3) chip noise + compensation ==")
+chans = {f"conv{i}": cfg.channels[i] for i in range(1, cfg.num_conv_layers)}
+noise = imc.IMCNoiseParams(mav_offset_std=8.0, sa_noise_std=1.0)
+offs = imc.sample_chip_offsets(jax.random.PRNGKey(0), chans, noise)
+print("   noisy   :", tr.evaluate_hw(hw, xte, yte, cfg, chip_offsets=offs,
+                                     sa_noise_std=1.0))
+hw_c = tr.calibrate_and_compensate(hw, xtr[:100], offs, cfg)
+print("   compensated:", tr.evaluate_hw(hw_c, xte, yte, cfg,
+                                        chip_offsets=offs, sa_noise_std=1.0))
+
+print("== 4) on-chip customization (personal set) ==")
+(xp_tr, yp_tr), (xp_te, yp_te) = audio.make_personal(
+    train_per_class=3, test_per_class=4, length=L, accent_shift=0.18)
+f_tr = tr.hw_features(hw_c, xp_tr, cfg, chip_offsets=offs, sa_noise_std=1.0)
+f_te = tr.hw_features(hw_c, xp_te, cfg, chip_offsets=offs, sa_noise_std=1.0)
+print("   before:", tr.evaluate_hw(hw_c, xp_te, yp_te, cfg,
+                                   chip_offsets=offs, sa_noise_std=1.0))
+ocfg = OnChipTrainConfig(epochs=400, error_scaling=True, sga=True, rgp=True)
+w, b = quantized_head_finetune(f_tr, yp_tr, np.asarray(hw_c.fc_w),
+                               np.asarray(hw_c.fc_b), ocfg)
+print("   after :", float(head_accuracy(f_te, yp_te, w, b, ocfg)))

@@ -1,0 +1,12 @@
+"""Batched LM serving demo (prefill + decode slots) on a reduced config.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [arch]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + (["--arch", sys.argv[1]]
+                                if len(sys.argv) > 1 else [])
+    main()

@@ -1,0 +1,14 @@
+"""End-to-end LM training driver on a reduced assigned architecture, with
+checkpoint/restart (kill it mid-run and re-run: it resumes).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [arch]
+"""
+import sys
+
+from repro.launch.train import train_loop
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-moe-30b-a3b"
+params, metrics = train_loop(arch, steps=40, reduced=True, batch=8, seq=64,
+                             ckpt_dir="/tmp/repro_ckpt_" + arch,
+                             ckpt_every=10, log_every=5)
+print(f"[train_lm] {arch} final: {metrics}")

@@ -1,0 +1,4 @@
+"""The paper's own model (reconstruction notes: DESIGN.md §4)."""
+from repro.models.kws import KWSConfig
+
+CONFIG = KWSConfig()          # full 16000-sample, 6-layer BNN

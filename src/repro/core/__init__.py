@@ -1,0 +1,12 @@
+"""The paper's primary contribution: IMC-aware quantized inference and
+on-chip quantized learning (error scaling + SGA + RGP), plus the analytical
+chip energy model and the distributed generalization (gradient compression
+with error feedback)."""
+
+from repro.core import binary, compensation, energy, grad_compress, imc
+from repro.core import onchip_training, quantize
+
+__all__ = [
+    "binary", "compensation", "energy", "grad_compress", "imc",
+    "onchip_training", "quantize",
+]

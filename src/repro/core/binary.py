@@ -1,0 +1,96 @@
+"""Binarization primitives for the IMC-aware BNN (paper §II).
+
+- ``binarize``: sign(x) in {-1, +1} with the standard BNN straight-through
+  estimator (gradient passed where |x| <= 1, clipped outside).
+- Learnable pre-binarization offset (ReActNet RSign, paper Fig 2): the
+  activation is binarized as sign(x + offset) with a trainable per-channel
+  offset.  At inference the offset merges into the in-memory BN bias.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def binarize(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1, +1} (zero maps to +1), STE backward with |x|<=1 clip."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _binarize_fwd(x):
+    return binarize(x), x
+
+
+def _binarize_bwd(x, g):
+    # Clipped straight-through: pass gradient where |x| <= 1.
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+binarize.defvjp(_binarize_fwd, _binarize_bwd)
+
+
+@jax.custom_vjp
+def binarize_sg(x: jax.Array, alpha: float) -> jax.Array:
+    """Hard sign forward, tanh-derivative surrogate backward.
+
+    Used in the final training phases: the forward pass is the bit-exact
+    binary network (no train/eval gap), while gradients remain informative
+    (alpha * sech^2(alpha*x) instead of the crude |x|<=1 box)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _binarize_sg_fwd(x, alpha):
+    return binarize_sg(x, alpha), (x, alpha)
+
+
+def _binarize_sg_bwd(res, g):
+    x, alpha = res
+    t = jnp.tanh(alpha * x)
+    return (g * alpha * (1.0 - t * t), None)
+
+
+binarize_sg.defvjp(_binarize_sg_fwd, _binarize_sg_bwd)
+
+
+def rsign(x: jax.Array, offset: jax.Array, channel_axis: int = -1) -> jax.Array:
+    """ReActNet learnable-threshold binarization: sign(x + offset).
+
+    ``offset`` is per-channel along ``channel_axis`` (paper Fig 2: a positive
+    offset pushes more features to +1, a negative one to -1).
+    """
+    shape = [1] * x.ndim
+    shape[channel_axis] = x.shape[channel_axis]
+    return binarize(x + offset.reshape(shape))
+
+
+def binary_matmul(x_bin: jax.Array, w_bin: jax.Array) -> jax.Array:
+    """Inner product of ±1 operands; equals (#agree - #disagree) = XNOR-popcount
+    rescaled.  On TPU this lowers onto the MXU (bf16 ±1 matmul) — the TPU-native
+    analogue of the SRAM crossbar MAV (DESIGN.md §3)."""
+    return jnp.matmul(x_bin, w_bin)
+
+
+def channel_shuffle(x: jax.Array, groups: int) -> jax.Array:
+    """ShuffleNet-style channel shuffle (paper Fig 9: the digital block after
+    each IMC layer is 'BN decoder, channel shuffle and pooling').  Without it
+    the grouped layers would be isolated channel towers."""
+    if groups <= 1:
+        return x
+    c = x.shape[-1]
+    assert c % groups == 0
+    shape = x.shape[:-1]
+    return (x.reshape(*shape, groups, c // groups)
+            .swapaxes(-1, -2)
+            .reshape(*shape, c))
+
+
+def or_maxpool(x_bin: jax.Array, window: int, axis: int = 1) -> jax.Array:
+    """Max-pool on ±1 activations == logical OR — matches the digital pooling
+    block after each IMC layer (paper Fig 9)."""
+    n = x_bin.shape[axis]
+    n_out = n // window
+    x = jax.lax.slice_in_dim(x_bin, 0, n_out * window, axis=axis)
+    new_shape = x.shape[:axis] + (n_out, window) + x.shape[axis + 1:]
+    return jnp.max(x.reshape(new_shape), axis=axis + 1)

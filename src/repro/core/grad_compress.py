@@ -1,0 +1,91 @@
+"""Distributed gradient compression with error feedback (beyond-paper).
+
+The paper's two training tricks compose into a classic large-scale
+distributed-optimization primitive:
+
+  * *error scaling* (Eq 1-2)  ->  per-tensor dynamic power-of-two scaling
+    before low-bit quantization of the gradient,
+  * *small gradient accumulation* (Alg 1) -> the per-device **error-feedback
+    residual**: whatever the quantizer drops is banked locally and re-injected
+    into the next step, so no gradient mass is ever lost.
+
+This module implements an int8 gradient all-reduce built from
+all_to_all (int8, 1 byte/elem on the wire) + local int32 reduction +
+all_gather (int8), cutting collective bytes ~4x vs fp32 ring all-reduce while
+keeping SGD convergence (error feedback guarantees the residual is bounded by
+one quantization step).  Used by the data-parallel trainer; validated
+numerically in tests/test_grad_compress.py on a multi-device host platform.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127
+
+
+def _pow2_scale(max_abs: jax.Array) -> jax.Array:
+    """Power-of-two scale s.t. max_abs * scale <= INT8_MAX (shift-friendly,
+    exactly the paper's Eq 2 applied to the int8 grid)."""
+    safe = jnp.maximum(max_abs, jnp.finfo(jnp.float32).tiny)
+    s = jnp.floor(jnp.log2(INT8_MAX / safe))
+    return jnp.where(max_abs > 0, jnp.exp2(s), jnp.float32(1.0))
+
+
+def quantize_int8(x: jax.Array, scale: jax.Array) -> jax.Array:
+    return jnp.clip(jnp.round(x * scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) / scale
+
+
+def compressed_allreduce_mean(grad: jax.Array, residual: jax.Array,
+                              axis_name: str) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 mean-all-reduce.  Must run inside shard_map/pmap
+    with ``axis_name`` bound.
+
+    grad, residual: identical shapes, local per-device values.
+    Returns (mean_grad_approx, new_residual).
+
+    Wire format: each device sends int8 shards (all_to_all) and receives int8
+    results (all_gather) -> 2 bytes/element total vs 8 for fp32 ring
+    all-reduce.
+    """
+    n = jax.lax.psum(1, axis_name)
+    e = grad + residual                                   # error feedback
+    # One scale for the whole group so the int32 reduction is exact.
+    max_abs = jax.lax.pmax(jnp.max(jnp.abs(e)), axis_name)
+    scale = _pow2_scale(max_abs)
+    q = quantize_int8(e, scale)
+    new_residual = e - dequantize_int8(q, scale)          # SGA-style banking
+
+    # Pad the flattened gradient so it splits evenly across the axis.
+    flat = q.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    shards = flat.reshape(n, -1)
+    # all_to_all: device d receives shard d from every peer (int8 on the wire).
+    gathered = jax.lax.all_to_all(shards, axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    # Local exact reduction in int32, then requantize the *sum* to int8.
+    local_sum = jnp.sum(gathered.astype(jnp.int32), axis=0)
+    sum_max = jax.lax.pmax(jnp.max(jnp.abs(local_sum)), axis_name)
+    sscale = _pow2_scale(sum_max.astype(jnp.float32))
+    q_sum = quantize_int8(local_sum.astype(jnp.float32), sscale)
+    # all_gather the int8 reduced shards back to everyone.
+    full = jax.lax.all_gather(q_sum, axis_name, axis=0, tiled=False).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    # Dequant chain: q ~ e*scale, local_sum ~ sum(e)*scale, q_sum ~ local_sum*sscale
+    # => mean = q_sum / (sscale * scale * n).
+    mean = dequantize_int8(full.reshape(grad.shape), sscale) / (scale * n)
+    return mean, new_residual
+
+
+def exact_allreduce_mean(grad: jax.Array, axis_name: str) -> jax.Array:
+    """fp32 reference path (for tests and the uncompressed trainer)."""
+    return jax.lax.pmean(grad, axis_name)

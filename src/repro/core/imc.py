@@ -1,0 +1,227 @@
+"""Functional model of the SRAM in-memory-computing (IMC) macro (paper §IV).
+
+The physical macro ([17], Fig 6): 8 banks of 64x64 8T SRAM cells per macro
+(4KB).  Binary weights live in the array; activations precharge read bitlines;
+multiply-and-average (MAV) happens by charge sharing on AVG_P/AVG_N lines, and a
+sense amplifier (SA) converts the analog difference to a 1-bit output.  Batch
+norm executes *in memory*: the BN bias is one word-line of +/-1 cells driven by
+input 1, so
+
+  - the bias is an integer in [-64, 64],
+  - its parity is fixed by the array width (even for a 64-wide array),
+  - the SA output is sign(sum_i x_i w_i + bias + analog noise).
+
+This module provides the bit/count-exact functional model of all of that, plus
+the two non-ideal effects the paper compensates:
+
+  * MAV offset  — a static per-bank (per output channel) analog mismatch,
+                  drawn once per *chip* (Monte-Carlo over PVT corners),
+  * SA variation — per-evaluation comparator noise near the threshold.
+
+Everything is expressed in the integer "count" domain of the array (the analog
+averaging /64 divides both sides of the comparison and is absorbed into the
+threshold — DESIGN.md §3), so the model is exact and jit-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.binary import binarize
+
+# ---------------------------------------------------------------------------
+# Macro geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IMCMacroConfig:
+    rows: int = 64                 # word lines per bank
+    cols: int = 64                 # bit lines per bank
+    banks_per_macro: int = 8       # one bank computes one output channel slice
+    bias_rows: int = 1             # word lines reserved for in-memory BN
+
+    @property
+    def macro_bits(self) -> int:
+        return self.rows * self.cols * self.banks_per_macro
+
+    @property
+    def macro_bytes(self) -> int:
+        return self.macro_bits // 8
+
+    @property
+    def bias_range(self) -> int:
+        """|bias| <= cols (one word-line of +/-1 cells)."""
+        return self.cols
+
+    @property
+    def bias_parity_even(self) -> bool:
+        """Sum of an even number of +/-1 cells is even."""
+        return self.cols % 2 == 0
+
+
+DEFAULT_MACRO = IMCMacroConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class IMCNoiseParams:
+    """Noise magnitudes in array-count units (1 count = one +/-1 product)."""
+
+    mav_offset_std: float = 4.0    # static per-channel MAV mismatch
+    sa_noise_std: float = 1.0      # per-evaluation SA comparator noise
+
+    def none(self) -> "IMCNoiseParams":
+        return IMCNoiseParams(0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# In-memory BN folding + bias mapping (paper §IV-A)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn_to_bias(gamma: jax.Array, beta: jax.Array, mean: jax.Array,
+                    var: jax.Array, act_offset: jax.Array,
+                    eps: float = 1e-5) -> Tuple[jax.Array, jax.Array]:
+    """Fold BN (+ the learnable pre-binarization offset, Fig 2) into a single
+    integer-domain threshold.
+
+    The binary activation is sign(gamma*(a-mean)/sigma + beta + act_offset).
+    For gamma > 0 this equals sign(a + b) with
+        b = (beta + act_offset) * sigma / gamma - mean,
+    and for gamma < 0 the SA output must be inverted (the digital "BN decoder"
+    in Fig 9 handles the sign).  Returns (bias_real, flip) with flip in
+    {+1, -1}.
+    """
+    sigma = jnp.sqrt(var + eps)
+    g = jnp.where(gamma == 0, 1e-12, gamma)
+    b = (beta + act_offset) * sigma / g - mean
+    flip = jnp.where(gamma >= 0, 1.0, -1.0)
+    return b, flip
+
+
+def map_bias(bias: jax.Array, method: str = "best",
+             macro: IMCMacroConfig = DEFAULT_MACRO) -> jax.Array:
+    """Quantize a real BN bias onto the in-memory grid.
+
+    The grid: integers of fixed parity (even for a 64-wide array) clipped to
+    [-cols, cols].  The paper evaluates four mappings — ``add`` (round toward
+    +inf), ``sub`` (toward -inf), ``abs_add`` (away from zero), ``abs_sub``
+    (toward zero) — and keeps the best; ``best`` here selects round-to-nearest
+    on the parity grid, which is what "lowest accuracy drop" converges to.
+    """
+    step = 2 if macro.bias_parity_even else 1
+    half = step / 2.0
+    if method == "add":
+        q = jnp.ceil(bias / step) * step
+    elif method == "sub":
+        q = jnp.floor(bias / step) * step
+    elif method == "abs_add":
+        q = jnp.sign(bias) * jnp.ceil(jnp.abs(bias) / step) * step
+    elif method == "abs_sub":
+        q = jnp.sign(bias) * jnp.floor(jnp.abs(bias) / step) * step
+    elif method == "best":
+        q = jnp.round(bias / step) * step
+    else:
+        raise ValueError(f"unknown bias mapping method: {method}")
+    return jnp.clip(q, -macro.bias_range, macro.bias_range)
+
+
+BIAS_MAPPING_METHODS = ("add", "sub", "abs_add", "abs_sub", "best")
+
+
+# ---------------------------------------------------------------------------
+# Chip instance: static Monte-Carlo noise realization
+# ---------------------------------------------------------------------------
+
+
+def sample_chip_offsets(key: jax.Array, channels_per_layer: Dict[str, int],
+                        noise: IMCNoiseParams) -> Dict[str, jax.Array]:
+    """Draw the static MAV offsets of one fabricated chip.
+
+    One offset per output channel per IMC layer (each output channel is served
+    by one bank / AVG-line pair, so the mismatch is static per channel).
+    """
+    offsets = {}
+    for name, c in sorted(channels_per_layer.items()):
+        key, sub = jax.random.split(key)
+        offsets[name] = noise.mav_offset_std * jax.random.normal(sub, (c,))
+    return offsets
+
+
+# ---------------------------------------------------------------------------
+# The MAV + SA forward path
+# ---------------------------------------------------------------------------
+
+
+def mav_sa(counts: jax.Array, bias_int: jax.Array, flip: jax.Array,
+           mav_offset: jax.Array | None = None,
+           sa_key: jax.Array | None = None,
+           sa_noise_std: float = 0.0) -> jax.Array:
+    """The macro's analog epilogue: sign(counts + bias + noise) with BN-decoder
+    sign correction.  ``counts`` has channels on the last axis; ``bias_int``,
+    ``flip`` and ``mav_offset`` are per-channel."""
+    pre = counts + bias_int
+    if mav_offset is not None:
+        pre = pre + mav_offset
+    if sa_key is not None and sa_noise_std > 0.0:
+        pre = pre + sa_noise_std * jax.random.normal(sa_key, pre.shape)
+    return binarize(pre * flip)
+
+
+def binary_group_conv_counts(x_bin: jax.Array, w_bin: jax.Array,
+                             groups: int, stride: int = 1) -> jax.Array:
+    """Integer conv counts for a 1-D binary group convolution.
+
+    x_bin: (B, T, C_in) in {-1,+1};  w_bin: (K, C_in//groups, C_out) in {-1,+1}.
+    Returns (B, T_out, C_out) integer-valued counts (sum of +/-1 products) —
+    exactly what accumulates on the AVG lines before the SA.
+    """
+    dn = jax.lax.conv_dimension_numbers(x_bin.shape, w_bin.shape,
+                                        ("NWC", "WIO", "NWC"))
+    out = jax.lax.conv_general_dilated(
+        x_bin.astype(jnp.float32), w_bin.astype(jnp.float32),
+        window_strides=(stride,), padding="VALID",
+        dimension_numbers=dn, feature_group_count=groups)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Macro allocation / utilization accounting (paper Fig 8, §V-A)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMapping:
+    name: str
+    weight_bits: int
+    products_per_output: int      # fan-in of one SA decision
+    out_channels: int
+    macros: int
+    banks: int
+    utilization: float            # temporal utilization (pooling idles layers)
+
+
+def map_layer_to_macros(name: str, c_out: int, c_in_per_group: int, k: int,
+                        utilization: float,
+                        macro: IMCMacroConfig = DEFAULT_MACRO) -> LayerMapping:
+    """Allocate IMC banks for one binary conv layer.
+
+    Each output channel needs ceil(fan_in / rows_available) bank columns plus
+    the BN bias word-line; banks are grouped 8-to-a-macro (each bank serves one
+    output at a time, Fig 6).
+    """
+    fan_in = c_in_per_group * k
+    rows_avail = macro.rows - macro.bias_rows
+    banks_per_channel = max(1, -(-fan_in // rows_avail))
+    # 64 columns per bank hold 64 output channels' worth of one weight row each;
+    # capacity-wise a bank stores rows*cols bits.
+    weight_bits = c_out * fan_in + c_out * macro.cols  # weights + bias lines
+    banks = -(-weight_bits // (macro.rows * macro.cols))
+    macros = -(-banks // macro.banks_per_macro)
+    return LayerMapping(name=name, weight_bits=weight_bits,
+                        products_per_output=fan_in, out_channels=c_out,
+                        macros=macros, banks=banks, utilization=utilization)

@@ -1,0 +1,232 @@
+"""On-chip learning for model customization (paper §III, §V-C).
+
+Fine-tunes ONLY the final classifier layer, entirely in fixed point:
+
+    weight/gradient/error : Q1.7      activation : Q1.3.4
+    SGA accumulators      : 16-bit fixed point (Q1.15)
+
+and reproduces the paper's three enabling techniques:
+
+  * Error scaling (Eq 1-2)           — rescue errors that underflow Q1.7,
+  * Small Gradient Accumulation (Alg 1, Eq 3) — side-buffer sub-threshold
+    gradients in 16-bit and release them when they cross G_th,
+  * Random Gradient Prediction (Eq 4) — add quantize(N(0,1)/lambda).
+
+plus the hardware loss path: LUT-based exp for softmax and 8-bit division
+(§V-C).  The API is model-agnostic: any (features, labels, W, b) classifier
+head can be customized — this is what generalizes the technique to the LM
+architectures (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (ACCUM_Q, ACT_Q, ERROR_Q, GRAD_Q, WEIGHT_Q,
+                                 QFormat, error_scale_exponent)
+
+# ---------------------------------------------------------------------------
+# Hardware softmax: LUT exp + 8-bit division (paper §V-C)
+# ---------------------------------------------------------------------------
+
+# The FC output is Q1.3.4.  After max-subtraction z' = z - max(z) lies on the
+# Q1.3.4 grid in [-15.9375, 0]: exactly 256 grid points at step 1/16 -> one
+# 256-entry LUT ("the look-up table can easily cover all situations with a
+# small size register file").
+_LUT_STEP = ACT_Q.scale                      # 1/16
+_LUT_SIZE = 256
+_LUT_MIN = -(_LUT_SIZE - 1) * _LUT_STEP       # -15.9375
+# LUT entries stored as 8-bit unsigned fractions (Q0.8): exp(z') in (0, 1].
+_EXP_LUT = jnp.round(jnp.exp(jnp.arange(_LUT_SIZE) * _LUT_STEP + _LUT_MIN)
+                     * 256.0) / 256.0
+
+
+def lut_softmax(logits_q: jax.Array) -> jax.Array:
+    """Softmax over the last axis using the hardware LUT path.
+
+    ``logits_q`` must already be on the Q1.3.4 grid.  Division is truncated to
+    8 fractional bits, matching the fixed 8-bit divider.
+    """
+    z = logits_q - jnp.max(logits_q, axis=-1, keepdims=True)
+    idx = jnp.clip(jnp.round((z - _LUT_MIN) / _LUT_STEP), 0, _LUT_SIZE - 1)
+    e = _EXP_LUT[idx.astype(jnp.int32)]
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1.0 / 256.0)
+    return jnp.round(p * 256.0) / 256.0      # 8-bit division output
+
+
+# ---------------------------------------------------------------------------
+# Small Gradient Accumulation (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+def sga_threshold(lr: jax.Array | float,
+                  weight_fmt: QFormat = WEIGHT_Q) -> jax.Array:
+    """Eq (3): G_th = (min(weight)/2) / LR, min(weight) = one weight LSB."""
+    return (weight_fmt.scale / 2.0) / jnp.asarray(lr, jnp.float32)
+
+
+def sga_step(grad: jax.Array, accum: jax.Array, g_th: jax.Array,
+             accum_fmt: QFormat = ACCUM_Q) -> Tuple[jax.Array, jax.Array]:
+    """One elementwise SGA step (Algorithm 1, magnitude-symmetric form).
+
+    Sub-threshold gradients are banked into the 16-bit accumulator; once the
+    bank itself crosses the threshold it is released as the update and reset.
+    Returns (g_update, new_accum); both live on fixed-point grids so the whole
+    optimizer state is 16-bit as in the paper.
+    """
+    small = jnp.abs(grad) < g_th
+    banked = accum_fmt.quantize(accum + jnp.where(small, grad, 0.0))
+    fire = small & (jnp.abs(banked) >= g_th)
+    g_update = jnp.where(small, jnp.where(fire, banked, 0.0), grad)
+    new_accum = jnp.where(fire, 0.0, banked)
+    return g_update, new_accum
+
+
+def rgp_noise(key: jax.Array, shape, lam: float,
+              fmt: QFormat = GRAD_Q) -> jax.Array:
+    """Eq (4): quantize(N(0,1)/lambda) on the gradient grid."""
+    return fmt.quantize(jax.random.normal(key, shape) / lam)
+
+
+# ---------------------------------------------------------------------------
+# The full quantized last-layer fine-tuning loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OnChipTrainConfig:
+    epochs: int = 1000
+    lr_init: float = 1.0 / 16.0          # paper §VI-A3
+    lr_min: float = 1.0 / 128.0
+    lr_halve_every: int = 10
+    error_scaling: bool = True
+    # None -> dynamic Eq(2) per batch; the paper's chip fixes 1.375 (=1+1/4+1/8)
+    fixed_error_scale: Optional[float] = None
+    sga: bool = True
+    rgp: bool = False
+    rgp_lambda: float = 8.0
+    quantized: bool = True               # False -> full-precision GPU baseline
+    seed: int = 0
+    weight_fmt: QFormat = WEIGHT_Q
+    act_fmt: QFormat = ACT_Q
+    grad_fmt: QFormat = GRAD_Q
+    error_fmt: QFormat = ERROR_Q
+    accum_fmt: QFormat = ACCUM_Q
+
+
+class HeadState(NamedTuple):
+    w: jax.Array          # (D, C) on the weight grid
+    b: jax.Array          # (C,)
+    accum_w: jax.Array    # SGA banks
+    accum_b: jax.Array
+    key: jax.Array
+
+
+def lr_schedule(cfg: OnChipTrainConfig, epoch: jax.Array) -> jax.Array:
+    lr = cfg.lr_init * (0.5 ** (epoch // cfg.lr_halve_every))
+    return jnp.maximum(lr, cfg.lr_min)
+
+
+def head_logits(features_q: jax.Array, w: jax.Array, b: jax.Array,
+                cfg: OnChipTrainConfig) -> jax.Array:
+    """8-bit FC forward; output requantized onto the activation grid."""
+    z = features_q @ w + b
+    return cfg.act_fmt.quantize(z) if cfg.quantized else z
+
+
+def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
+                labels_1hot: jax.Array, cfg: OnChipTrainConfig) -> HeadState:
+    """One full-batch epoch (the chip reads the whole 90-utterance set)."""
+    n = features_q.shape[0]
+    lr = lr_schedule(cfg, epoch)
+
+    logits = head_logits(features_q, state.w, state.b, cfg)
+    if cfg.quantized:
+        probs = lut_softmax(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    err = probs - labels_1hot                       # dCE/dlogits (per sample)
+
+    if cfg.quantized:
+        if cfg.error_scaling:
+            if cfg.fixed_error_scale is not None:
+                scale = jnp.float32(cfg.fixed_error_scale)
+            else:
+                scale = jnp.exp2(error_scale_exponent(err).astype(jnp.float32))
+        else:
+            scale = jnp.float32(1.0)
+        err = cfg.error_fmt.quantize(err * scale)
+        # grad accumulated sample-by-sample into the gradient SRAM, then the
+        # batch mean is what the scaling factor was calibrated against (§V-C).
+        gw = cfg.grad_fmt.quantize(features_q.T @ err / n)
+        gb = cfg.grad_fmt.quantize(jnp.sum(err, axis=0) / n)
+    else:
+        gw = features_q.T @ err / n
+        gb = jnp.sum(err, axis=0) / n
+        scale = jnp.float32(1.0)
+
+    key = state.key
+    if cfg.rgp and cfg.quantized:
+        key, k1, k2 = jax.random.split(key, 3)
+        gw = cfg.grad_fmt.quantize(gw + rgp_noise(k1, gw.shape, cfg.rgp_lambda,
+                                                  cfg.grad_fmt))
+        gb = cfg.grad_fmt.quantize(gb + rgp_noise(k2, gb.shape, cfg.rgp_lambda,
+                                                  cfg.grad_fmt))
+
+    accum_w, accum_b = state.accum_w, state.accum_b
+    if cfg.sga and cfg.quantized:
+        g_th = sga_threshold(lr, cfg.weight_fmt)
+        gw, accum_w = sga_step(gw, accum_w, g_th, cfg.accum_fmt)
+        gb, accum_b = sga_step(gb, accum_b, g_th, cfg.accum_fmt)
+
+    if cfg.quantized:
+        w = cfg.weight_fmt.quantize(state.w - lr * gw)
+        b = cfg.weight_fmt.quantize(state.b - lr * gb)
+    else:
+        w = state.w - lr * gw
+        b = state.b - lr * gb
+    return HeadState(w, b, accum_w, accum_b, key)
+
+
+def quantized_head_finetune(features: jax.Array, labels: jax.Array,
+                            w0: jax.Array, b0: jax.Array,
+                            cfg: OnChipTrainConfig,
+                            num_classes: Optional[int] = None
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Customize a classifier head on-device.
+
+    features: (N, D) pre-classifier activations (the SRAM feature buffer),
+    labels:   (N,) int class ids.
+    Returns the fine-tuned (w, b) on the weight grid (or fp32 for the
+    full-precision baseline).  Model-agnostic: works for the KWS GAP features
+    or any LM pooled hidden state.
+    """
+    c = num_classes or w0.shape[-1]
+    labels_1hot = jax.nn.one_hot(labels, c)
+    feats = cfg.act_fmt.quantize(features) if cfg.quantized else features
+    w = cfg.weight_fmt.quantize(w0) if cfg.quantized else w0
+    b = cfg.weight_fmt.quantize(b0) if cfg.quantized else b0
+
+    state = HeadState(
+        w=w, b=b,
+        accum_w=jnp.zeros_like(w), accum_b=jnp.zeros_like(b),
+        key=jax.random.PRNGKey(cfg.seed),
+    )
+
+    def body(e, st):
+        return _epoch_step(st, e, feats, labels_1hot, cfg)
+
+    state = jax.lax.fori_loop(0, cfg.epochs, body, state)
+    return state.w, state.b
+
+
+def head_accuracy(features: jax.Array, labels: jax.Array, w: jax.Array,
+                  b: jax.Array, cfg: OnChipTrainConfig) -> jax.Array:
+    feats = cfg.act_fmt.quantize(features) if cfg.quantized else features
+    logits = head_logits(feats, w, b, cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

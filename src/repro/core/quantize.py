@@ -1,0 +1,136 @@
+"""Fixed-point quantization primitives for the IMC-KWS accelerator.
+
+The paper's on-chip datapath is entirely fixed point (§III-B, §VI-A3):
+
+    weight     : 1 sign bit, 7 decimal bits   (Q1.7,  step 1/128, range [-1, 127/128])
+    activation : 1 sign, 3 integer, 4 decimal (Q1.3.4, step 1/16,  range [-8, 127/16])
+    gradient   : 1 sign bit, 7 decimal bits   (Q1.7)
+    error      : 1 sign bit, 7 decimal bits   (Q1.7)
+    SGA accum  : 16-bit fixed point           (Q1.15 by default)
+
+Everything here is pure JAX and jit/pjit friendly.  Quantizers use the
+straight-through estimator (STE) so the same functions serve quantization-aware
+training and the bit-exact inference/fine-tuning path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """A signed fixed-point format: 1 sign bit, ``int_bits`` integer bits and
+    ``frac_bits`` fractional bits.
+
+    Representable grid: k / 2**frac_bits for integer k in [qmin, qmax].
+    """
+
+    int_bits: int
+    frac_bits: int
+    name: str = ""
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        """Value of one LSB."""
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.int_bits + self.frac_bits) - 1
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.int_bits + self.frac_bits))
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+    # ---- value-domain ops -------------------------------------------------
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """Round-to-nearest-even onto the grid, saturating. Returns real values."""
+        q = jnp.clip(jnp.round(x / self.scale), self.qmin, self.qmax)
+        return q * self.scale
+
+    def quantize_ste(self, x: jax.Array) -> jax.Array:
+        """Quantize with a *clipped* straight-through gradient: identity
+        inside the representable range, zero outside (PACT/DoReFa-style).
+        Without the clip, Adam walks latent weights past the saturation
+        boundary and the quantized layer silently dies."""
+        grad_path = jnp.where(jnp.abs(x) <= self.max_value, x,
+                              jax.lax.stop_gradient(x))
+        return grad_path + jax.lax.stop_gradient(self.quantize(x) - grad_path)
+
+    # ---- integer-domain ops ----------------------------------------------
+    def to_int(self, x: jax.Array, dtype=jnp.int32) -> jax.Array:
+        """Real value -> integer code (saturating round-to-nearest)."""
+        return jnp.clip(jnp.round(x / self.scale), self.qmin, self.qmax).astype(dtype)
+
+    def from_int(self, q: jax.Array) -> jax.Array:
+        return q.astype(jnp.float32) * self.scale
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return self.name or f"Q1.{self.int_bits}.{self.frac_bits}"
+
+
+# The paper's formats (§VI-A3).
+WEIGHT_Q = QFormat(int_bits=0, frac_bits=7, name="weight:Q1.7")
+ACT_Q = QFormat(int_bits=3, frac_bits=4, name="act:Q1.3.4")
+GRAD_Q = QFormat(int_bits=0, frac_bits=7, name="grad:Q1.7")
+ERROR_Q = QFormat(int_bits=0, frac_bits=7, name="error:Q1.7")
+ACCUM_Q = QFormat(int_bits=0, frac_bits=15, name="accum:Q1.15")  # 16-bit SGA buffer
+
+
+def quantize_ste(x: jax.Array, fmt: QFormat) -> jax.Array:
+    return fmt.quantize_ste(x)
+
+
+def error_scale_exponent(error: jax.Array) -> jax.Array:
+    """Eq (2): s = ceil(log2(1 / max|error|)).
+
+    Computed in integer/shift-friendly form; returns an int32 scalar.  A zero
+    error tensor yields s = 0 (nothing to scale).
+    """
+    m = jnp.max(jnp.abs(error))
+    safe = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
+    s = jnp.ceil(jnp.log2(1.0 / safe)).astype(jnp.int32)
+    return jnp.where(m > 0, s, jnp.int32(0))
+
+
+def scale_error(error: jax.Array, fmt: QFormat = ERROR_Q,
+                fixed_scale: Optional[float] = None):
+    """Eq (1): ScaleError = error * 2**s, then quantize to ``fmt``.
+
+    If ``fixed_scale`` is given it is used verbatim (the hardware mode: the
+    paper fixes the factor to 1.375 = 1 + 1/4 + 1/8, shift-and-add friendly).
+    Returns (scaled_quantized_error, scale_used).
+    """
+    if fixed_scale is not None:
+        scale = jnp.float32(fixed_scale)
+    else:
+        s = error_scale_exponent(error)
+        scale = jnp.exp2(s.astype(jnp.float32))
+    return fmt.quantize(error * scale), scale
+
+
+def stochastic_round(x: jax.Array, fmt: QFormat, key: jax.Array) -> jax.Array:
+    """Stochastic rounding onto a fixed-point grid (used by ablations)."""
+    y = x / fmt.scale
+    lo = jnp.floor(y)
+    p = y - lo
+    up = jax.random.uniform(key, x.shape) < p
+    q = jnp.clip(lo + up.astype(lo.dtype), fmt.qmin, fmt.qmax)
+    return q * fmt.scale

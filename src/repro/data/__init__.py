@@ -1,0 +1,3 @@
+from repro.data import audio, tokens
+
+__all__ = ["audio", "tokens"]

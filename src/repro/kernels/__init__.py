@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the accelerator's compute hot spots:
+
+  imc_mav     — binary MAV + in-memory BN + SA sign (the IMC macro)
+  int8_matmul — 8-bit fixed-point FC fwd (inference + on-chip training)
+  sga_update  — fused Algorithm-1 optimizer sweep
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
+wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
+BlockSpecs are MXU/VMEM-aligned for the TPU target.
+"""

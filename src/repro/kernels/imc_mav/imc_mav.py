@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: the IMC macro's MAV + in-memory-BN + SA epilogue.
+
+TPU-native adaptation of the SRAM crossbar (DESIGN.md §3): the ±1 inner
+product runs on the MXU as a bf16 matmul over VMEM-resident tiles; the
+in-memory BN bias add, optional analog-noise injection and the SA 1-bit
+decision are fused into the epilogue so pre-activations never touch HBM —
+mirroring how the macro never digitizes the analog MAV value.
+
+Layout: X (M, K) ±1 activations/patches, W (K, N) ±1 weights, bias (N,)
+integer word-line bias, flip (N,) BN-decoder sign, optional noise (M, N)
+(MAV offset + SA variation realization).  K is the macro fan-in (<= 64 per
+bank physically; padded to 128 here for MXU lane alignment — zero padding
+contributes 0 to the count, exactly like unused word lines).  The W tile is
+grid-invariant along M so weights stay VMEM-resident across the batch grid,
+the TPU analogue of weight-stationary in-SRAM storage.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mav_kernel(x_ref, w_ref, b_ref, f_ref, o_ref):
+    counts = jnp.dot(x_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    pre = (counts + b_ref[...][None, :]) * f_ref[...][None, :]
+    o_ref[...] = jnp.where(pre >= 0, 1.0, -1.0).astype(o_ref.dtype)
+
+
+def _mav_kernel_noise(x_ref, w_ref, b_ref, f_ref, n_ref, o_ref):
+    counts = jnp.dot(x_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    pre = counts + b_ref[...][None, :] + n_ref[...]
+    pre = pre * f_ref[...][None, :]
+    o_ref[...] = jnp.where(pre >= 0, 1.0, -1.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "interpret"))
+def imc_mav(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
+            noise: jax.Array | None = None, *, bm: int = 256, bn: int = 128,
+            interpret: bool = True) -> jax.Array:
+    """sign((x @ w + bias [+ noise]) * flip) with VMEM-fused epilogue.
+
+    x: (M, K) ±1; w: (K, N) ±1; bias/flip: (N,); noise: (M, N) or None.
+    M, N must be multiples of (bm, bn) — ops.py pads.  K is unblocked (macro
+    fan-in, small).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // bm, n // bn)
+    x_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    w_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))   # M-invariant: stays
+    b_spec = pl.BlockSpec((bn,), lambda i, j: (j,))       # resident in VMEM
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if noise is None:
+        return pl.pallas_call(
+            _mav_kernel, grid=grid,
+            in_specs=[x_spec, w_spec, b_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=interpret,
+        )(x, w, bias, flip)
+    n_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _mav_kernel_noise, grid=grid,
+        in_specs=[x_spec, w_spec, b_spec, b_spec, n_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, bias, flip, noise)

@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the imc_mav Pallas kernel: padding to tile
+boundaries, im2col for the binary group conv, and the (B, T, C) activation
+interface used by repro.models.kws."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.imc_mav.imc_mav import imc_mav
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def mav_matmul(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
+               noise: jax.Array | None = None, interpret: bool = True
+               ) -> jax.Array:
+    """Tile-padded entry: x (M,K) ±1, w (K,N) ±1 -> (M,N) ±1."""
+    m0, n0 = x.shape[0], w.shape[1]
+    bm, bn = 256, 128
+    x, _ = _pad_to(x, 0, bm)
+    x, _ = _pad_to(x, 1, 128)
+    w, _ = _pad_to(w, 0, 128)
+    w, _ = _pad_to(w, 1, bn)
+    bias, _ = _pad_to(bias, 0, bn)
+    flip = jnp.pad(flip, (0, bias.shape[0] - flip.shape[0]),
+                   constant_values=1.0)
+    if noise is not None:
+        noise, _ = _pad_to(noise, 0, bm)
+        noise, _ = _pad_to(noise, 1, bn)
+    out = imc_mav(x, w, bias, flip, noise, bm=bm, bn=bn, interpret=interpret)
+    return out[:m0, :n0]
+
+
+def mav_sa_apply(counts: jax.Array, bias: jax.Array, flip: jax.Array,
+                 sa_key: jax.Array | None, sa_noise_std: float,
+                 interpret: bool = True) -> jax.Array:
+    """Epilogue-only path used when counts are already computed (the model's
+    conv produces counts; the kernel fuses bias+noise+SA)."""
+    b, t, c = counts.shape
+    x = counts.reshape(b * t, c)
+    noise = None
+    if sa_key is not None and sa_noise_std > 0:
+        noise = sa_noise_std * jax.random.normal(sa_key, x.shape)
+    # identity "matmul": route counts through the epilogue with W=I is
+    # wasteful — use the epilogue math directly in jnp instead; the full
+    # kernel path is exercised via conv_mav below.
+    pre = x + bias[None, :]
+    if noise is not None:
+        pre = pre + noise
+    pre = pre * flip[None, :]
+    out = jnp.where(pre >= 0, 1.0, -1.0).astype(counts.dtype)
+    return out.reshape(b, t, c)
+
+
+def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """x (B, T, C) -> patches (B, T_out, k*C)."""
+    b, t, c = x.shape
+    t_out = (t - k) // stride + 1
+    idx = jnp.arange(t_out)[:, None] * stride + jnp.arange(k)[None, :]
+    patches = x[:, idx, :]                       # (B, T_out, k, C)
+    return patches.reshape(b, t_out, k * c)
+
+
+def conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
+             groups: int, stride: int = 1,
+             sa_key: jax.Array | None = None, sa_noise_std: float = 0.0,
+             interpret: bool = True) -> jax.Array:
+    """Full IMC layer through the Pallas kernel: binary group conv (as an
+    im2col matmul per group) + in-memory BN + SA.
+
+    x: (B, T, C_in) ±1;  w: (K, C_in//groups, C_out) ±1.
+    """
+    b, t, c_in = x.shape
+    k, cpg, c_out = w.shape
+    cog = c_out // groups
+    t_out = (t - k) // stride + 1
+    outs = []
+    key = sa_key
+    for g in range(groups):
+        xg = x[..., g * cpg:(g + 1) * cpg]
+        wg = w[..., g * cog:(g + 1) * cog]            # (K, cpg, cog)
+        patches = _im2col(xg, k, stride).reshape(b * t_out, k * cpg)
+        wmat = wg.reshape(k * cpg, cog)
+        noise = None
+        if key is not None and sa_noise_std > 0:
+            key, sub = jax.random.split(key)
+            noise = sa_noise_std * jax.random.normal(
+                sub, (b * t_out, cog), jnp.float32)
+        og = mav_matmul(patches, wmat, bias[g * cog:(g + 1) * cog],
+                        flip[g * cog:(g + 1) * cog], noise,
+                        interpret=interpret)
+        outs.append(og.reshape(b, t_out, cog))
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the imc_mav kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def imc_mav_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                flip: jax.Array, noise: jax.Array | None = None) -> jax.Array:
+    counts = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    pre = counts + bias[None, :]
+    if noise is not None:
+        pre = pre + noise
+    pre = pre * flip[None, :]
+    return jnp.where(pre >= 0, 1.0, -1.0).astype(x.dtype)

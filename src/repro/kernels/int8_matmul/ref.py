@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the int8_matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                    shift: int = 7, out_max: int = 127) -> jax.Array:
+    acc = jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32)) + bias[None, :]
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    return jnp.clip(acc, -out_max - 1, out_max).astype(jnp.int8)

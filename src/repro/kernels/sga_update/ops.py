@@ -1,0 +1,31 @@
+"""Public wrapper: pytree-flat SGA update through the Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sga_update.sga_update import sga_update
+
+
+def sga_update_tree(params, grads, accums, lr: float, g_th: float,
+                    interpret: bool = True):
+    """Apply the fused update leaf-wise; shapes preserved."""
+    leaves_w, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_a = treedef.flatten_up_to(accums)
+    new_w, new_a = [], []
+    for w, g, a in zip(leaves_w, leaves_g, leaves_a):
+        shape = w.shape
+        flat = lambda x: x.reshape(-1)
+        n = w.size
+        pad = (-n) % 1024
+        wp = jnp.pad(flat(w), (0, pad))
+        gp = jnp.pad(flat(g), (0, pad))
+        ap = jnp.pad(flat(a), (0, pad))
+        nw, na = sga_update(wp, gp, ap, lr=float(lr), g_th=float(g_th),
+                            interpret=interpret)
+        new_w.append(nw[:n].reshape(shape))
+        new_a.append(na[:n].reshape(shape))
+    return (jax.tree_util.tree_unflatten(treedef, new_w),
+            jax.tree_util.tree_unflatten(treedef, new_a))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused SGA update kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sga_update_ref(w, g, accum, lr, g_th, w_scale=1.0 / 128,
+                   w_max=127.0 / 128, a_scale=2.0 ** -15):
+    small = jnp.abs(g) < g_th
+    banked = jnp.round((accum + jnp.where(small, g, 0.0)) / a_scale) * a_scale
+    fire = small & (jnp.abs(banked) >= g_th)
+    g_upd = jnp.where(small, jnp.where(fire, banked, 0.0), g)
+    new_a = jnp.where(fire, 0.0, banked)
+    new_w = w - lr * g_upd
+    new_w = jnp.clip(jnp.round(new_w / w_scale) * w_scale, -w_max - w_scale,
+                     w_max)
+    return new_w, new_a

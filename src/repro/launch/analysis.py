@@ -1,0 +1,360 @@
+"""Roofline analysis from the compiled dry-run artifact (DESIGN.md §8).
+
+Three terms per (arch x shape x mesh), in seconds:
+
+  compute    = FLOPs / (chips * 197e12)           [bf16 peak, TPU v5e]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = collective bytes / (chips * 50e9)  [~ICI link bw per chip]
+
+FLOPs/HBM-bytes use exact parameter counts (jax.eval_shape) + standard
+analytic activation/attention terms: XLA's cost_analysis does not multiply
+while-loop (scan) bodies by their trip count, so the compiled counter
+underestimates deep stacks; we therefore use the analytic terms as primary
+and report cost_analysis alongside (EXPERIMENTS.md notes the comparison).
+
+Collective bytes are parsed from the post-SPMD HLO text: operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+with ops inside while bodies multiplied by the layer-scan trip count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[128,4096]' -> bytes.  Tuple shapes: sum components."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_structure(hlo_text: str):
+    """Walk the HLO module: per-computation collective bytes, while edges
+    (parent_comp -> body/cond computations) with trip counts recovered from
+    the loop condition's compare-against-constant, and call edges."""
+    comp_coll: Dict[str, Dict[str, float]] = {}
+    comp_consts: Dict[str, list] = {}
+    while_edges = []               # (parent, body, cond)
+    call_edges = []                # (parent, callee)
+    current = "__top__"
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?([\w\.\-]+)\s*\([^)]*\)\s*->", ls)
+        if m and ls.endswith("{"):
+            current = m.group(1)
+            continue
+        mw = re.search(r"=.*\bwhile\(", ls)
+        if mw:
+            mb = re.search(r"body=%?([\w\.\-]+)", ls)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ls)
+            if mb:
+                while_edges.append((current, mb.group(1),
+                                    mc.group(1) if mc else None))
+            continue
+        for pat in (r"to_apply=%?([\w\.\-]+)",
+                    r"true_computation=%?([\w\.\-]+)",
+                    r"false_computation=%?([\w\.\-]+)",
+                    r"branch_computations=\{%?([\w\.\-]+)"):
+            for mm in re.finditer(pat, ls):
+                call_edges.append((current, mm.group(1)))
+        mk = re.match(r"%?[\w\.\-]+ = s32\[\] constant\((\d+)\)", ls)
+        if mk:
+            comp_consts.setdefault(current, []).append(int(mk.group(1)))
+        for op in COLLECTIVE_OPS:
+            if (f"= {op}" in ls or f" {op}(" in ls
+                    or f"{op}-start" in ls):
+                rhs = ls.split(" = ", 1)
+                shape_src = rhs[1] if len(rhs) == 2 else ls
+                nbytes = _shape_bytes(shape_src.split("(")[0])
+                comp_coll.setdefault(current, {}).setdefault(op, 0.0)
+                comp_coll[current][op] += nbytes
+                break
+    return comp_coll, comp_consts, while_edges, call_edges
+
+
+def parse_collective_bytes(hlo_text: str,
+                           while_multiplier: int = 1) -> Dict[str, float]:
+    """Per-device collective bytes, with while/scan bodies multiplied by
+    their trip counts.
+
+    Trip counts are recovered from each loop condition's
+    compare-to-constant; if none is found, ``while_multiplier`` (the layer
+    count) is used as the fallback.  Multipliers compose through nested
+    loops and call edges (fixpoint propagation)."""
+    comp_coll, comp_consts, while_edges, call_edges = _parse_structure(
+        hlo_text)
+
+    trip_of_body: Dict[str, int] = {}
+    for parent, body, cond in while_edges:
+        trip = None
+        if cond and cond in comp_consts:
+            cands = [c for c in comp_consts[cond] if c > 1]
+            if cands:
+                trip = max(cands)
+        trip_of_body[body] = trip if trip is not None else while_multiplier
+
+    mult: Dict[str, float] = {"__top__": 1.0}
+    # fixpoint: propagate multipliers down while/call edges
+    for _ in range(12):
+        changed = False
+        for parent, body, cond in while_edges:
+            pm = mult.get(parent, None)
+            if pm is None:
+                continue
+            m_new = pm * trip_of_body[body]
+            if mult.get(body) != m_new:
+                mult[body] = m_new
+                changed = True
+            if cond and mult.get(cond) != m_new:
+                mult[cond] = m_new
+        for parent, callee in call_edges:
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            if mult.get(callee, 0) < pm:
+                mult[callee] = pm
+                changed = True
+        if not changed:
+            break
+
+    totals = {k: 0.0 for k in COLLECTIVE_OPS}
+    for comp, per_op in comp_coll.items():
+        m = mult.get(comp, 1.0)
+        for op, b in per_op.items():
+            totals[op] += b * m
+    totals["total"] = sum(totals[k] for k in COLLECTIVE_OPS)
+    return totals
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / bytes
+# ---------------------------------------------------------------------------
+
+
+def param_counts(cfg: ArchConfig) -> Dict[str, float]:
+    """Exact parameter counts from abstract init (no allocation)."""
+    import jax
+    from repro.launch.steps import abstract_params
+    params = jax.eval_shape(lambda: abstract_params(cfg)) \
+        if not hasattr(abstract_params(cfg), "keys") else abstract_params(cfg)
+    leaves = jax.tree_util.tree_leaves(params)
+    total = float(sum(np.prod(l.shape) for l in leaves))
+    embed = float(np.prod(params["embed"].shape))
+    if "unembed" in params:
+        embed += float(np.prod(params["unembed"].shape))
+    n_active = total
+    if cfg.moe is not None:
+        moe_leaves = 0.0
+        for seg in params["segments"]:
+            if isinstance(seg, dict) and "moe" in str(
+                    jax.tree_util.tree_structure(seg)):
+                pass
+        # routed-expert params: (w_gate + w_up + w_down) per expert
+        e, d, f = (cfg.moe.num_experts, cfg.moe.d_model, cfg.moe.d_ff_expert)
+        routed = cfg.n_layers * e * (3 * d * f)
+        n_active = total - routed * (1.0 - cfg.moe.top_k / e)
+    return {"total": total, "embed": embed, "active": n_active,
+            "active_nonembed": n_active - embed}
+
+
+def _mixer_flops_per_token(cfg: ArchConfig, context: int) -> float:
+    """Attention/SSM flops per token per layer (fwd), excluding projections
+    (those are in the parameter term)."""
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        d_attn = cfg.n_heads * cfg.head_dim
+        return 2.0 * 2.0 * context * d_attn        # QK^T + AV
+    if cfg.family == "xlstm":
+        x = cfg.xlstm
+        c = 128.0
+        dk = dv = x.head_dim
+        return 2.0 * x.n_heads * (c * (dk + dv) + 3 * dk * dv)
+    if cfg.family == "hybrid":
+        mb = cfg.mamba
+        c = 128.0
+        dk, dv, h = mb.d_state, mb.head_dim, mb.n_heads
+        return 2.0 * h * (c * (dk + dv) + 3 * dk * dv)
+    return 0.0
+
+
+def analytic_flops(cfg: ArchConfig, shape_name: str) -> Dict[str, float]:
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    pc = param_counts(cfg)
+    n = pc["active_nonembed"]
+    d = cfg.d_model
+
+    if kind == "train":
+        tokens = b * (s + (cfg.frontend_len if cfg.family in ("vlm",)
+                           else 0))
+        base = 6.0 * n * tokens                     # fwd+bwd matmuls
+        mixer = 3.0 * tokens * cfg.n_layers * _mixer_flops_per_token(
+            cfg, context=s / 2)
+        embed_flops = 6.0 * tokens * d * cfg.vocab_padded
+        return {"flops": base + mixer + embed_flops, "tokens": tokens,
+                "model_flops": 6.0 * pc["active"] * tokens}
+    if kind == "prefill":
+        tokens = b * s
+        base = 2.0 * n * tokens
+        mixer = tokens * cfg.n_layers * _mixer_flops_per_token(
+            cfg, context=s / 2)
+        embed_flops = 2.0 * tokens * d * cfg.vocab_padded
+        return {"flops": base + mixer + embed_flops, "tokens": tokens,
+                "model_flops": 2.0 * pc["active"] * tokens}
+    # decode: one token per sequence, attention reads the full cache
+    tokens = b * 1
+    base = 2.0 * n * tokens
+    mixer = tokens * cfg.n_layers * _mixer_flops_per_token(cfg, context=s)
+    embed_flops = 2.0 * tokens * d * cfg.vocab_padded
+    return {"flops": base + mixer + embed_flops, "tokens": tokens,
+            "model_flops": 2.0 * pc["active"] * tokens}
+
+
+def analytic_bytes(cfg: ArchConfig, shape_name: str) -> Dict[str, float]:
+    """Approximate global HBM traffic per step."""
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    pc = param_counts(cfg)
+    d = cfg.d_model
+    if kind == "train":
+        tokens = b * s
+        # params: read fwd (bf16) + read bwd + write grads + opt update
+        # (read params+m+v fp32, write params+m+v fp32)
+        pbytes = pc["total"] * (2 + 2 + 4 + 6 * 4)
+        # activations: remat => ~2 fwd writes + 1 bwd read of layer inputs
+        abytes = 3.0 * tokens * d * cfg.n_layers * 2
+        return {"bytes": pbytes + abytes}
+    if kind == "prefill":
+        tokens = b * s
+        pbytes = pc["total"] * 2
+        abytes = 2.0 * tokens * d * cfg.n_layers * 2
+        cache = 2.0 * b * s * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers * 2
+        return {"bytes": pbytes + abytes + cache}
+    # decode
+    pbytes = pc["total"] * 2
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        if cfg.moe:
+            pbytes = pc["active"] * 2    # only routed-to experts are touched
+        cache = 2.0 * b * s * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers * 2
+    else:
+        # recurrent state read+write
+        if cfg.family == "xlstm":
+            x = cfg.xlstm
+            st = b * x.n_heads * x.head_dim * x.head_dim * 4
+        else:
+            mb = cfg.mamba
+            st = b * mb.n_heads * mb.d_state * mb.head_dim * 4
+        cache = 2.0 * st * cfg.n_layers
+    return {"bytes": pbytes + cache}
+
+
+# ---------------------------------------------------------------------------
+# Roofline assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float               # analytic total (XLA scan-adjusted note)
+    cost_analysis_flops: Optional[float]
+    collective_bytes: float
+    bytes_per_device: Optional[float]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / max(terms): the bound with PERFECT
+        compute/comm overlap."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / max(self.bound_s, 1e-30)
+
+    @property
+    def roofline_fraction_serial(self) -> float:
+        """useful-compute time / sum(terms): the bound with NO overlap —
+        the honest baseline number; hillclimbing closes the gap between
+        serial and overlapped."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / max(self.compute_s + self.memory_s
+                           + self.collective_s, 1e-30)
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, useful_ratio=self.useful_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 roofline_fraction_serial=self.roofline_fraction_serial,
+                 bound_s=self.bound_s)
+        return d
+
+
+def build_roofline(cfg: ArchConfig, shape_name: str, chips: int,
+                   hlo_text: str,
+                   cost_flops: Optional[float] = None,
+                   bytes_per_device: Optional[float] = None) -> Roofline:
+    fl = analytic_flops(cfg, shape_name)
+    by = analytic_bytes(cfg, shape_name)
+    # scan-body collectives fire once per layer
+    coll = parse_collective_bytes(hlo_text, while_multiplier=cfg.n_layers)
+    coll_bytes = coll["total"]
+    return Roofline(
+        arch=cfg.name, shape=shape_name, chips=chips,
+        compute_s=fl["flops"] / (chips * PEAK_FLOPS),
+        memory_s=by["bytes"] / (chips * HBM_BW),
+        collective_s=coll_bytes / ICI_BW,   # per-device bytes already
+        model_flops=fl["model_flops"],
+        hlo_flops=fl["flops"],
+        cost_analysis_flops=cost_flops,
+        collective_bytes=coll_bytes,
+        bytes_per_device=bytes_per_device,
+    )

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import/initialization (device count locks on first
+#   backend init).  Only the dry-run sees 512 placeholder devices.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) cell, build the production mesh,
+shard parameters/optimizer/batch per repro.sharding.policy, and prove the
+distributed program is coherent:
+
+    jax.jit(step, in_shardings=...).lower(**specs).compile()
+
+must succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.
+Records memory_analysis / cost_analysis / parsed collective bytes into a
+JSON result consumed by EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod --out r.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def should_skip(cfg, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("long_500k requires sub-quadratic attention; "
+                f"{cfg.name} is full-attention (DESIGN.md §6)")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_overrides: Optional[Dict[str, Any]] = None,
+             policy_opts: Optional[Dict[str, Any]] = None) -> Dict:
+    """Lower + compile one cell; return the §Dry-run/§Roofline record.
+    policy_opts: §Perf knobs forwarded to MeshPolicy (no_fsdp, ep_axis,
+    serve_mode)."""
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import analysis
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import (abstract_opt_state, abstract_params,
+                                    cache_specs, input_specs,
+                                    make_decode_step, make_prefill_step,
+                                    make_train_step)
+    from repro.sharding.policy import MeshPolicy
+
+    cfg = get_config(arch)
+    if opt_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **opt_overrides)
+    skip = should_skip(cfg, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "status": "skip",
+                "reason": skip}
+
+    kind = SHAPES[shape_name]["kind"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mp = MeshPolicy(mesh, **(policy_opts or {}))
+    policy = mp.activation_policy()
+    t0 = time.time()
+
+    with mesh:
+        batch = input_specs(cfg, shape_name)
+        batch_sh = mp.shardings(mp.batch_specs(batch))
+        params = abstract_params(cfg)
+        pspecs = mp.param_specs(params)
+        params_sh = mp.shardings(pspecs)
+
+        if kind == "train":
+            opt_state = abstract_opt_state(cfg)
+            opt_sh = mp.shardings(mp.opt_state_specs(opt_state, pspecs))
+            step = make_train_step(cfg, policy)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None))
+            lowered = jitted.lower(params, opt_state, batch)
+        elif kind == "prefill":
+            step = make_prefill_step(cfg, policy)
+            # explicit output shardings for the produced KV cache: without
+            # them XLA materializes the cache replicated (zamba2 prefill_32k
+            # peaked at 44GB/device from its 43GB unsharded attention cache)
+            out_struct = jax.eval_shape(step, params, batch)
+            cache_sh_out = mp.shardings(mp.cache_specs(out_struct[1]))
+            out_sh = ((None, cache_sh_out)
+                      if len(out_struct) == 2
+                      else (None, cache_sh_out, None))
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params, batch)
+        else:  # decode
+            caches = cache_specs(cfg, shape_name)
+            cache_sh = mp.shardings(mp.cache_specs(caches))
+            step = make_decode_step(cfg, policy)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params, caches, batch)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- proofs + roofline inputs ----
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+            }
+    except Exception as e:  # CPU backend may not support it
+        mem = {"error": str(e)}
+
+    cost_flops = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        if ca:
+            cost_flops = float(ca.get("flops", -1.0))
+    except Exception:
+        pass
+
+    hlo = compiled.as_text()
+    chips = int(np.prod(mesh.devices.shape))
+    roof = analysis.build_roofline(
+        cfg, shape_name, chips=chips, hlo_text=hlo, cost_flops=cost_flops,
+        bytes_per_device=(mem or {}).get("peak_bytes"))
+    coll = analysis.parse_collective_bytes(hlo,
+                                           while_multiplier=cfg.n_layers)
+
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "multi_pod": multi_pod, "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "cost_analysis_flops": cost_flops,
+        "collectives": {k: v for k, v in coll.items()},
+        "roofline": roof.as_dict(),
+    }
+
+
+def main() -> None:
+    from repro.configs.base import ARCH_IDS, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp_flag in meshes:
+                tag = f"{arch} x {shape} ({'2x16x16' if mp_flag else '16x16'})"
+                try:
+                    rec = run_cell(arch, shape, mp_flag)
+                    status = rec["status"]
+                    extra = ""
+                    if status == "ok":
+                        r = rec["roofline"]
+                        extra = (f" dominant={r['dominant']}"
+                                 f" frac={r['roofline_fraction']:.3f}"
+                                 f" compile={rec['compile_s']}s")
+                    print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "multi_pod": mp_flag, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[dryrun] {tag}: ERROR {type(e).__name__}: {e}",
+                          flush=True)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {ok} ok, {skip} skip, {err} error")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

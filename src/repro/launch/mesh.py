@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (smoke tests must keep seeing 1 CPU device; only dryrun.py sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 (data, model).  Multi-pod: 2x16x16 (pod, data,
+    model) — DP across pods, FSDP over `data`, TP/EP over `model`."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small host-platform mesh for distribution tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,154 @@
+"""jit-able train / prefill / decode step builders + ShapeDtypeStruct input
+specs for every (architecture x shape) cell.  Used by the dry-run, the
+trainer and the server."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models.layers import NO_SHARDING, ShardingPolicy
+from repro.optim import adam, cosine_schedule
+
+COMPUTE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    """Model inputs for one shape cell, as ShapeDtypeStructs."""
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "encdec":
+        if kind == "train":
+            return {"frames": sds((b, cfg.frontend_len, cfg.d_model),
+                                  COMPUTE),
+                    "tokens": sds((b, s), jnp.int32),
+                    "labels": sds((b, s), jnp.int32)}
+        if kind == "prefill":
+            return {"frames": sds((b, cfg.frontend_len, cfg.d_model),
+                                  COMPUTE),
+                    "tokens": sds((b, s), jnp.int32)}
+        # decode: one token against a full self-attn cache + encoder memory
+        return {"tokens": sds((b, 1), jnp.int32),
+                "memory": sds((b, cfg.frontend_len, cfg.d_model), COMPUTE),
+                "index": sds((), jnp.int32)}
+    if cfg.family == "vlm" and kind == "train":
+        return {"frames": sds((b, cfg.frontend_len, cfg.d_model), COMPUTE),
+                "tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    if kind == "train":
+        return {"tokens": sds((b, s), jnp.int32),
+                "labels": sds((b, s), jnp.int32)}
+    if kind == "prefill":
+        spec = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            spec["frames"] = sds((b, cfg.frontend_len, cfg.d_model), COMPUTE)
+        return spec
+    # decode
+    return {"tokens": sds((b, 1), jnp.int32),
+            "index": sds((), jnp.int32)}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStructs of the decode cache for this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if cfg.family == "encdec":
+        return jax.eval_shape(lambda: ED.init_dec_cache(cfg, b, s))
+    return jax.eval_shape(lambda: LM.init_cache(cfg, b, s))
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: ArchConfig, lr: float = 3e-4, steps: int = 10_000):
+    return adam(cosine_schedule(lr, steps, warmup_steps=200))
+
+
+def make_train_step(cfg: ArchConfig, policy: ShardingPolicy = NO_SHARDING,
+                    optimizer=None):
+    optimizer = optimizer or make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            if cfg.family == "encdec":
+                logits = ED.forward_encdec(p, cfg, batch["frames"],
+                                           batch["tokens"], policy)
+                loss = LM.lm_loss(logits, batch["labels"], cfg.vocab_size)
+                return loss, loss
+            prefix = batch.get("frames") if cfg.family == "vlm" else None
+            logits, aux = LM.forward_lm(p, cfg, batch["tokens"], policy,
+                                        prefix_embeds=prefix)
+            offset = prefix.shape[1] if prefix is not None else 0
+            loss = LM.lm_loss(logits, batch["labels"], cfg.vocab_size,
+                              label_offset=offset)
+            return loss + aux, loss
+
+        (total, loss), grads = jax.value_and_grad(loss_fn,
+                                                  has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "total": total}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig,
+                      policy: ShardingPolicy = NO_SHARDING):
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            logits, cache, memory = ED.prefill_encdec(
+                params, cfg, batch["frames"], batch["tokens"], policy)
+            return logits, cache, memory
+        return prefill_step
+
+    def prefill_step(params, batch):
+        prefix = batch.get("frames") if cfg.family == "vlm" else None
+        logits, caches = LM.prefill(params, cfg, batch["tokens"], policy,
+                                    prefix_embeds=prefix)
+        return logits, caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig,
+                     policy: ShardingPolicy = NO_SHARDING):
+    if cfg.family == "encdec":
+        def decode_fn(params, caches, batch):
+            return ED.decode_step_encdec(params, cfg, batch["tokens"],
+                                         batch["memory"], caches,
+                                         batch["index"], policy)
+        return decode_fn
+
+    def decode_fn(params, caches, batch):
+        return LM.decode_step(params, cfg, batch["tokens"], caches,
+                              batch["index"], policy)
+    return decode_fn
+
+
+def init_params_for(cfg: ArchConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.family == "encdec":
+        return ED.init_encdec(key, cfg)
+    return LM.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params_for(cfg))
+
+
+def abstract_opt_state(cfg: ArchConfig, optimizer=None):
+    optimizer = optimizer or make_optimizer(cfg)
+    params = abstract_params(cfg)
+    return jax.eval_shape(optimizer.init, params)

@@ -1,0 +1,3 @@
+from repro.models import kws
+
+__all__ = ["kws"]

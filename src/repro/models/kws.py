@@ -1,0 +1,453 @@
+"""The paper's IMC-aware KWS binary neural network (paper §II, Fig 1).
+
+Topology (reconstruction notes in DESIGN.md §4):
+
+  L1  binarized sinc conv  1 -> 24ch, k=15, stride 4          (digital)
+  L2  binary group conv   24 -> 96,  k=3, cpg=24, pool 2      (IMC)
+  L3  binary group conv   96 -> 192, k=3, cpg=24, pool 2      (IMC)
+  L4  binary group conv  192 -> 288, k=3, cpg=24              (IMC)
+  L5  binary group conv  288 -> 384, k=3, cpg=24, pool 2      (IMC, 2 macros)
+  L6  binary group conv  384 -> 576, k=3, cpg=24, pool 2      (IMC, 2 macros)
+  GAP -> FC 576 -> 10                                          (digital, 8-bit)
+
+Every conv layer carries in-memory BN (folded to an integer word-line bias at
+inference) and a ReActNet learnable pre-binarization offset (Fig 2, merged
+into the bias at fold time).  Three forwards are provided:
+
+  * ``forward_train``: float QAT path (STE binarization, live BN), with
+    optional injected IMC noise for noise-aware fine-tuning (§IV-B);
+  * ``forward_eval``:  float path with frozen (running) BN stats;
+  * ``hw_forward``:    the bit/count-exact hardware path over folded params,
+    with BN parity/range constraints, MAV offset + SA variation — the model
+    of the silicon.  Can optionally route the IMC layers through the Pallas
+    ``imc_mav`` kernel (use_kernel=True).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import imc
+from repro.core.binary import (binarize, binarize_sg, channel_shuffle,
+                               or_maxpool, rsign)
+from repro.core.quantize import ACT_Q, WEIGHT_Q
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KWSConfig:
+    channels: Tuple[int, ...] = (24, 96, 192, 288, 384, 576)
+    kernels: Tuple[int, ...] = (15, 3, 3, 3, 3, 3)
+    strides: Tuple[int, ...] = (4, 1, 1, 1, 1, 1)
+    pools: Tuple[int, ...] = (1, 2, 2, 1, 2, 2)
+    channels_per_group: int = 24
+    num_classes: int = 10
+    sample_len: int = 16_000
+    sample_rate: int = 16_000
+    bias_mapping: str = "best"          # paper §IV-A: pick best of 4
+    bn_momentum: float = 0.9
+    # 'batch': standard BN statistics; 'fixed': pure learned threshold
+    # (gamma*counts/sqrt(fan_in)+beta) — the in-memory-BN hardware semantics,
+    # and it preserves duty-cycle information through the sign activation.
+    bn_mode: str = "fixed"
+
+    @property
+    def num_conv_layers(self) -> int:
+        return len(self.channels)
+
+    def groups(self, layer: int) -> int:
+        if layer == 0:
+            return 1
+        return self.channels[layer - 1] // self.channels_per_group
+
+    def imc_layer_names(self):
+        """conv1..conv5: the IMC-mapped layers (conv0 = digital sinc)."""
+        return [f"conv{i}" for i in range(1, self.num_conv_layers)]
+
+    def param_count(self) -> Dict[str, int]:
+        n_bin, n_fc, n_bn = 0, 0, 0
+        for i in range(self.num_conv_layers):
+            cin = 1 if i == 0 else self.channels[i - 1]
+            n_bin += self.channels[i] * (cin // self.groups(i)) * self.kernels[i]
+            n_bn += self.channels[i]
+        n_fc = self.channels[-1] * self.num_classes + self.num_classes
+        return {"binary": n_bin, "bn_bias": n_bn, "fc": n_fc,
+                "total": n_bin + n_bn + n_fc,
+                "model_bits": n_bin + n_bn * 8 + n_fc * 8}
+
+
+PAPER_KWS = KWSConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameters / state
+# ---------------------------------------------------------------------------
+
+
+class KWSState(NamedTuple):
+    """BN running statistics (frozen during customization, §III-A)."""
+    mean: Dict[str, jax.Array]
+    var: Dict[str, jax.Array]
+
+
+def init_params(key: jax.Array, cfg: KWSConfig = PAPER_KWS) -> Dict:
+    keys = jax.random.split(key, cfg.num_conv_layers + 1)
+    params: Dict = {}
+    # Sinc layer: learned band edges, mel-ish spaced initialization.
+    n0 = cfg.channels[0]
+    # init the learned filter bank where a 15-tap binary kernel has
+    # resolution (>= ~1 kHz at 16 kHz sample rate)
+    low = jnp.linspace(700.0, 6200.0, n0)
+    band = jnp.full((n0,), 300.0) + jnp.linspace(0.0, 900.0, n0)
+    # Threshold (beta) init: a *negative* pre-binarization threshold makes
+    # sign() energy-selective — a matched filter's oscillating response
+    # exceeds the threshold (duty cycle encodes amplitude) while mismatched
+    # responses stay below it.  With zero thresholds sign() is amplitude-
+    # blind (any tone gives a 50% duty square wave in every channel).  This
+    # is exactly the role of the paper's learnable offset (Fig 2/3); we fold
+    # the init into beta and keep the offset itself at the paper's zero init.
+    params["conv0"] = {
+        "low_hz": low, "band_hz": band,
+        "gamma": jnp.ones((n0,)), "beta": jnp.full((n0,), -0.6),
+        "offset": jnp.zeros((n0,)),
+    }
+    for i in range(1, cfg.num_conv_layers):
+        cin_g = cfg.channels[i - 1] // cfg.groups(i)
+        shape = (cfg.kernels[i], cin_g, cfg.channels[i])
+        w = jax.random.normal(keys[i], shape) * 0.1
+        params[f"conv{i}"] = {
+            "w": w,
+            "gamma": jnp.ones((cfg.channels[i],)),
+            "beta": jnp.full((cfg.channels[i],), -0.25),
+            "offset": jnp.zeros((cfg.channels[i],)),
+        }
+    d = cfg.channels[-1]
+    params["fc"] = {
+        "w": jax.random.normal(keys[-1], (d, cfg.num_classes))
+        * (1.0 / jnp.sqrt(d)),
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return params
+
+
+def init_state(cfg: KWSConfig = PAPER_KWS) -> KWSState:
+    mean = {f"conv{i}": jnp.zeros((cfg.channels[i],))
+            for i in range(cfg.num_conv_layers)}
+    var = {}
+    for i in range(cfg.num_conv_layers):
+        if cfg.bn_mode == "fixed":
+            # fixed mode normalizes by sqrt(fan_in); the stats must carry
+            # that from step 0 so fold_params is consistent untrained too
+            cin = 1 if i == 0 else cfg.channels[i - 1]
+            fan_in = (cin // cfg.groups(i)) * cfg.kernels[i]
+            var[f"conv{i}"] = jnp.full((cfg.channels[i],),
+                                       float(fan_in) - 1e-5)
+        else:
+            var[f"conv{i}"] = jnp.ones((cfg.channels[i],))
+    return KWSState(mean=mean, var=var)
+
+
+# ---------------------------------------------------------------------------
+# Sinc filter bank (binarized SincNet front end, [11])
+# ---------------------------------------------------------------------------
+
+
+def sinc_kernel(low_hz: jax.Array, band_hz: jax.Array, k: int,
+                sample_rate: int) -> jax.Array:
+    """Band-pass windowed-sinc kernels, (k, 1, C). Binarized by the caller."""
+    low = jnp.abs(low_hz) + 30.0
+    high = jnp.clip(low + jnp.abs(band_hz), 30.0, sample_rate / 2 - 30.0)
+    t = (jnp.arange(k) - (k - 1) / 2.0) / sample_rate        # (k,)
+    window = 0.54 - 0.46 * jnp.cos(2 * jnp.pi * jnp.arange(k) / (k - 1))
+
+    def bp(f):
+        return 2 * f * jnp.sinc(2 * f * t)                    # (C,k) via vmap
+
+    h = (jax.vmap(bp)(high) - jax.vmap(bp)(low)) * window     # (C, k)
+    # Per-filter max-normalization: sign(h) (the binarized forward) is
+    # invariant, but it keeps |h|<=1 so the binarize STE clip passes
+    # gradients back to the learned band edges.
+    h = h / (jnp.max(jnp.abs(h), axis=-1, keepdims=True) + 1e-6)
+    return jnp.transpose(h)[:, None, :]                       # (k, 1, C)
+
+
+# ---------------------------------------------------------------------------
+# Shared conv plumbing
+# ---------------------------------------------------------------------------
+
+
+def _conv_counts(x: jax.Array, w_bin: jax.Array, stride: int,
+                 groups: int) -> jax.Array:
+    return imc.binary_group_conv_counts(x, w_bin, groups=groups, stride=stride)
+
+
+def _batchnorm_train(counts, gamma, beta, running_mean, running_var,
+                     momentum: float):
+    mu = jnp.mean(counts, axis=(0, 1))
+    var = jnp.var(counts, axis=(0, 1))
+    y = gamma * (counts - mu) / jnp.sqrt(var + 1e-5) + beta
+    new_mean = momentum * running_mean + (1 - momentum) * mu
+    new_var = momentum * running_var + (1 - momentum) * var
+    return y, new_mean, new_var
+
+
+def _batchnorm_eval(counts, gamma, beta, mean, var):
+    return gamma * (counts - mean) / jnp.sqrt(var + 1e-5) + beta
+
+
+# ---------------------------------------------------------------------------
+# Float forwards (QAT training / eval)
+# ---------------------------------------------------------------------------
+
+
+def _float_forward(params, state: KWSState, x: jax.Array, cfg: KWSConfig,
+                   train: bool,
+                   chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                   sa_noise_std: float = 0.0,
+                   rng: Optional[jax.Array] = None,
+                   soft_alpha: Optional[float] = None):
+    """Common float path.  With chip_offsets/sa_noise it becomes the
+    noise-aware (QAT) forward used for recovery fine-tuning.
+
+    soft_alpha: annealed-binarization training (act = tanh(alpha*(y+off))).
+    Hard sign gives no usable gradient signal on this task (the loss is a
+    staircase in the trunk parameters); annealing alpha up and finishing with
+    the hard path recovers a bit-exact binary model.  Inference/hardware
+    paths always use hard sign."""
+    new_mean, new_var = dict(state.mean), dict(state.var)
+    h = x[..., None]                                   # (B, T, 1)
+    for i in range(cfg.num_conv_layers):
+        name = f"conv{i}"
+        p = params[name]
+        latent = (sinc_kernel(p["low_hz"], p["band_hz"], cfg.kernels[0],
+                              cfg.sample_rate) if i == 0 else p["w"])
+        # soft_alpha semantics: None -> hard STE; a > 0 -> tanh(a*x) soft
+        # annealing; a < 0 -> hard forward with tanh'(|a|x) surrogate grad.
+        if soft_alpha is not None and soft_alpha > 0:
+            w = jnp.tanh(soft_alpha * latent)          # annealed binarization
+        elif soft_alpha is not None and soft_alpha < 0:
+            w = binarize_sg(latent, -soft_alpha)
+        else:
+            w = binarize(latent)
+        counts = _conv_counts(h, w, cfg.strides[i], cfg.groups(i))
+        if chip_offsets is not None and i > 0:
+            counts = counts + chip_offsets[name]
+        if sa_noise_std > 0.0 and rng is not None and i > 0:
+            rng, sub = jax.random.split(rng)
+            counts = counts + sa_noise_std * jax.random.normal(sub,
+                                                               counts.shape)
+        if cfg.bn_mode == "fixed":
+            fan_in = w.shape[0] * w.shape[1]
+            if soft_alpha is not None and soft_alpha < 0 and i > 0:
+                # hard phase: train through the EXACT in-memory bias grid
+                # (count domain, parity + [-64,64] constraints, STE) so the
+                # trained network is bit-identical to the folded silicon.
+                sigma = jnp.sqrt(float(fan_in))
+                g_safe = jnp.where(jnp.abs(p["gamma"]) < 0.05,
+                                   jnp.sign(p["gamma"]) * 0.05 + 1e-9,
+                                   p["gamma"])
+                b_eff = (p["beta"] + p["offset"]) * sigma / g_safe
+                b_q = b_eff + jax.lax.stop_gradient(
+                    imc.map_bias(b_eff, cfg.bias_mapping) - b_eff)
+                flip = jnp.where(p["gamma"] >= 0, 1.0, -1.0)
+                h = binarize_sg((counts + b_q) * flip, -soft_alpha)
+                h = channel_shuffle(h, cfg.groups(i))
+                if cfg.pools[i] > 1:
+                    h = or_maxpool(h, cfg.pools[i], axis=1)
+                new_mean[name] = jnp.zeros_like(state.mean[name])
+                new_var[name] = jnp.full_like(state.var[name],
+                                              float(fan_in)) - 1e-5
+                continue
+            y = p["gamma"] * counts / jnp.sqrt(float(fan_in)) + p["beta"]
+            # running stats pinned to the fixed normalization (fold-exact)
+            new_mean[name] = jnp.zeros_like(state.mean[name])
+            new_var[name] = jnp.full_like(state.var[name],
+                                          float(fan_in)) - 1e-5
+        elif train:
+            y, m, v = _batchnorm_train(counts, p["gamma"], p["beta"],
+                                       state.mean[name], state.var[name],
+                                       cfg.bn_momentum)
+            new_mean[name], new_var[name] = m, v
+        else:
+            y = _batchnorm_eval(counts, p["gamma"], p["beta"],
+                                state.mean[name], state.var[name])
+        off = p["offset"].reshape((1,) * (y.ndim - 1) + (-1,))
+        if soft_alpha is not None and soft_alpha > 0:
+            h = jnp.tanh(soft_alpha * (y + off))
+        elif soft_alpha is not None and soft_alpha < 0:
+            h = binarize_sg(y + off, -soft_alpha)
+        else:
+            h = rsign(y, p["offset"])
+        h = channel_shuffle(h, cfg.groups(i))          # Fig 9 digital block
+        if cfg.pools[i] > 1:
+            h = or_maxpool(h, cfg.pools[i], axis=1)
+    feats = jnp.mean(h, axis=1)                        # GAP, in [-1, 1]
+    feats = ACT_Q.quantize_ste(feats)                  # QAT on the feature buf
+    wq = WEIGHT_Q.quantize_ste(params["fc"]["w"])      # 8-bit FC (QAT)
+    bq = WEIGHT_Q.quantize_ste(params["fc"]["b"])
+    logits = feats @ wq + bq
+    return logits, feats, KWSState(mean=new_mean, var=new_var)
+
+
+def forward_train(params, state, x, cfg: KWSConfig = PAPER_KWS,
+                  chip_offsets=None, sa_noise_std: float = 0.0, rng=None,
+                  soft_alpha=None):
+    logits, _, new_state = _float_forward(params, state, x, cfg, True,
+                                          chip_offsets, sa_noise_std, rng,
+                                          soft_alpha=soft_alpha)
+    return logits, new_state
+
+
+def forward_eval(params, state, x, cfg: KWSConfig = PAPER_KWS):
+    logits, feats, _ = _float_forward(params, state, x, cfg, False)
+    return logits, feats
+
+
+# ---------------------------------------------------------------------------
+# Hardware folding (paper §IV-A) and the count-exact hardware path
+# ---------------------------------------------------------------------------
+
+
+class HWParams(NamedTuple):
+    w_bin: Dict[str, jax.Array]       # ±1 weights per conv layer
+    bias: Dict[str, jax.Array]        # folded integer-domain biases
+    flip: Dict[str, jax.Array]        # BN-decoder sign (±1)
+    fc_w: jax.Array                   # Q1.7
+    fc_b: jax.Array
+
+
+def fold_params(params, state: KWSState, cfg: KWSConfig = PAPER_KWS,
+                macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
+                bn_constraints: bool = True,
+                fc_quant: bool = True) -> HWParams:
+    """Fold BN (+ learnable offsets) into biases; apply the IMC bias grid
+    (parity + [-64,64]) for IMC layers; quantize the FC to 8 bits.
+
+    ``bn_constraints=False`` / ``fc_quant=False`` give the Table III ablation
+    points.
+    """
+    w_bin, bias, flip = {}, {}, {}
+    for i in range(cfg.num_conv_layers):
+        name = f"conv{i}"
+        p = params[name]
+        if i == 0:
+            w = binarize(sinc_kernel(p["low_hz"], p["band_hz"],
+                                     cfg.kernels[0], cfg.sample_rate))
+        else:
+            w = binarize(p["w"])
+        w_bin[name] = w
+        b, f = imc.fold_bn_to_bias(p["gamma"], p["beta"], state.mean[name],
+                                   state.var[name], p["offset"])
+        if not bn_constraints:
+            bias[name] = b            # ablation: no hardware grid anywhere
+        elif i == 0:
+            # digital adder: fine fixed-point grid, no parity constraint
+            bias[name] = jnp.round(b * 128.0) / 128.0
+        else:
+            bias[name] = imc.map_bias(b, cfg.bias_mapping, macro)
+        flip[name] = f
+    fw, fb = params["fc"]["w"], params["fc"]["b"]
+    if fc_quant:
+        fw, fb = WEIGHT_Q.quantize(fw), WEIGHT_Q.quantize(fb)
+    return HWParams(w_bin=w_bin, bias=bias, flip=flip, fc_w=fw, fc_b=fb)
+
+
+def hw_forward(hw: HWParams, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
+               chip_offsets: Optional[Dict[str, jax.Array]] = None,
+               sa_noise_std: float = 0.0,
+               rng: Optional[jax.Array] = None,
+               collect_counts: bool = False,
+               use_kernel: bool = False):
+    """The silicon path: integer counts -> in-memory BN -> SA sign.
+
+    Returns (logits, features) and, with collect_counts, the per-layer pre-SA
+    counts (the chip's test mode, used for bias-compensation calibration).
+    """
+    counts_log: Dict[str, jax.Array] = {}
+    h = x[..., None]
+    for i in range(cfg.num_conv_layers):
+        name = f"conv{i}"
+        counts = _conv_counts(h, hw.w_bin[name], cfg.strides[i],
+                              cfg.groups(i))
+        if chip_offsets is not None and i > 0:
+            counts = counts + chip_offsets[name]
+        if collect_counts:
+            counts_log[name] = counts
+        key = None
+        if rng is not None and sa_noise_std > 0.0 and i > 0:
+            rng, key = jax.random.split(rng)
+        if use_kernel and i > 0:
+            from repro.kernels.imc_mav import ops as mav_ops
+            h = mav_ops.mav_sa_apply(counts, hw.bias[name], hw.flip[name],
+                                     key, sa_noise_std)
+        else:
+            h = imc.mav_sa(counts, hw.bias[name], hw.flip[name],
+                           mav_offset=None, sa_key=key,
+                           sa_noise_std=sa_noise_std if i > 0 else 0.0)
+        h = channel_shuffle(h, cfg.groups(i))          # Fig 9 digital block
+        if cfg.pools[i] > 1:
+            h = or_maxpool(h, cfg.pools[i], axis=1)
+    feats = ACT_Q.quantize(jnp.mean(h, axis=1))
+    logits = feats @ hw.fc_w + hw.fc_b
+    if collect_counts:
+        return logits, feats, counts_log
+    return logits, feats
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics / layer stats for the energy model
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def layer_stats(cfg: KWSConfig = PAPER_KWS):
+    """Per-layer op counts per decision, feeding repro.core.energy.
+    Controller cycles are distributed over the chip's 160k cycles/decision
+    proportionally to each layer's temporal occupancy (the utilization
+    schedule of §V-A)."""
+    from repro.core.energy import CYCLES_PER_DECISION
+    stats = []
+    t = cfg.sample_len
+    t_per_layer = []
+    for i in range(cfg.num_conv_layers):
+        t = (t - cfg.kernels[i]) // cfg.strides[i] + 1
+        t_per_layer.append(t)
+        t //= cfg.pools[i]
+    total_t = sum(t_per_layer) + cfg.channels[-1]
+    t = cfg.sample_len
+    for i in range(cfg.num_conv_layers):
+        t = t_per_layer[i]
+        cin = 1 if i == 0 else cfg.channels[i - 1]
+        fan_in = (cin // cfg.groups(i)) * cfg.kernels[i]
+        macs = t * cfg.channels[i] * fan_in
+        stats.append({
+            "name": f"conv{i}" if i else "sinc(L1)",
+            "kind": "digital" if i == 0 else "imc",
+            "macs": int(macs),
+            "in_bits": int(t * cin * (8 if i == 0 else 1)),
+            "out_bits": int(t * cfg.channels[i]),
+            "cycles": int(t / total_t * CYCLES_PER_DECISION),
+        })
+    d = cfg.channels[-1]
+    stats.append({
+        "name": "gap+fc", "kind": "fc",
+        "macs": int(d * cfg.num_classes + d),
+        "in_bits": int(d * 8), "out_bits": int(cfg.num_classes * 8),
+        "cycles": int(d / total_t * CYCLES_PER_DECISION),
+    })
+    return stats

@@ -1,0 +1,161 @@
+"""Mamba2 (SSD) block, chunkwise-parallel, built on the shared GLA core.
+
+The SSD recurrence (Mamba2, Dao & Gu 2024) is
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ,  y_t = C_t . h_t + D x_t
+with a *scalar* per-head decay — i.e. exactly the gated-linear-attention
+recurrence in repro.models.layers with q=C, k=B, v=x, log_a = dt*A, b = dt.
+The chunked form keeps the MXU busy instead of a length-T sequential scan.
+
+Decode keeps (conv_state, ssm_state) per layer: O(1) per token — this is why
+zamba2/xlstm run the long_500k cell while full-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (NO_SHARDING, ShardingPolicy, dense,
+                                 dense_init, gated_linear_attention, gla_step,
+                                 rmsnorm, rmsnorm_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, cfg: Mamba2Config) -> Dict:
+    ks = jax.random.split(key, 5)
+    di, dm = cfg.d_inner, cfg.d_model
+    h = cfg.n_heads
+    # in_proj packs [z, x, B, C, dt]
+    d_in_proj = 2 * di + 2 * cfg.d_state + h
+    return {
+        "in_proj": dense_init(ks[0], dm, d_in_proj),
+        "conv_w": jax.random.normal(ks[1],
+                                    (cfg.d_conv, di + 2 * cfg.d_state),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * cfg.d_state,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)),      # per-head decay
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[2], di, dm),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B,T,C); w: (K,C).  With state (B,K-1,C)
+    supports streaming; returns (y, new_state)."""
+    k = w.shape[0]
+    wc = w.astype(x.dtype)
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * wc[i][None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(y + b.astype(x.dtype)), new_state
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: Mamba2Config):
+    di, ds, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = zxbcdt[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def mamba2_apply(p: Dict, cfg: Mamba2Config, x: jax.Array,
+                 policy: ShardingPolicy = NO_SHARDING,
+                 chunk: int = 128) -> jax.Array:
+    """Training / prefill forward. x: (B, T, D)."""
+    b, t, _ = x.shape
+    h, hd, ds = cfg.n_heads, cfg.head_dim, cfg.d_state
+    zxbcdt = dense(p["in_proj"], x)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :cfg.d_inner]
+    Bm = xbc[..., cfg.d_inner:cfg.d_inner + ds]                  # (B,T,N)
+    Cm = xbc[..., cfg.d_inner + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                          # (B,T,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,) < 0
+    log_a = dt * A                                                # (B,T,H)
+
+    # GLA mapping: q=C, k=B (shared across heads -> broadcast), v=dt*x
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, t, h, ds))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, t, h, ds))
+    v = xin.reshape(b, t, h, hd)
+    # shard the head axis: the broadcast otherwise replicates (B,T,H,N)
+    # per device (44GB/device on zamba2 prefill_32k before this constraint)
+    q, k, v = policy.bthd(q), policy.bthd(k), policy.bthd(v)
+    pad = (-t) % chunk
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                                  (a.ndim - 2))
+        q, k, v = zeros(q), zeros(k), zeros(v)
+        log_a, dt = zeros(log_a), zeros(dt)
+    y = gated_linear_attention(q, k, v, log_a, dt, chunk=chunk,
+                               policy=policy if policy.enabled else None)
+    y = y[:, :t]
+    y = y.reshape(b, t, cfg.d_inner) + xin * jnp.repeat(
+        p["D"], hd)[None, None, :].astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    y = policy.btf(y)
+    return dense(p["out_proj"], y)
+
+
+def mamba2_init_cache(cfg: Mamba2Config, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+    }
+
+
+def mamba2_step(p: Dict, cfg: Mamba2Config, x: jax.Array, cache: Dict,
+                policy: ShardingPolicy = NO_SHARDING
+                ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode. x: (B, 1, D)."""
+    b = x.shape[0]
+    h, hd, ds = cfg.n_heads, cfg.head_dim, cfg.d_state
+    zxbcdt = dense(p["in_proj"], x)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                 state=cache["conv"])
+    xin = xbc[..., :cfg.d_inner]
+    Bm = xbc[..., cfg.d_inner:cfg.d_inner + ds]
+    Cm = xbc[..., cfg.d_inner + ds:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    log_a = dt * A
+    q = jnp.broadcast_to(Cm[:, 0, None, :], (b, h, ds))
+    k = jnp.broadcast_to(Bm[:, 0, None, :], (b, h, ds))
+    v = xin[:, 0].reshape(b, h, hd)
+    y, new_ssm = gla_step(q, k, v, log_a, dt, cache["ssm"])
+    y = y.reshape(b, 1, cfg.d_inner) + xin * jnp.repeat(
+        p["D"], hd)[None, None, :].astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN (qwen3-moe / qwen2-moe style).
+
+GShard-style capacity-based top-k routing with dense dispatch/combine
+scatter-gathers: compile-friendly under pjit, and the (E, C, D) expert buffer
+shards over the `model` mesh axis (expert parallelism) so dispatch/combine
+lower to all-to-all on the production mesh.
+
+qwen2-moe additionally has *shared* experts (always-on dense FFN branch) and
+a sigmoid-weighted shared-expert gate; both are supported via config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (NO_SHARDING, ShardingPolicy, dense,
+                                 dense_init)
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    num_experts: int
+    top_k: int
+    num_shared_experts: int = 0
+    d_ff_shared: int = 0                # total shared intermediate size
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+def moe_init(key, cfg: MoEConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
+    s = d ** -0.5
+    p = {
+        "router": dense_init(ks[0], d, e),
+        # stacked expert weights: (E, D, F) / (E, F, D)
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32)
+        * (f ** -0.5),
+    }
+    if cfg.num_shared_experts > 0:
+        fs = cfg.d_ff_shared or cfg.num_shared_experts * f
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d, fs),
+            "w_up": dense_init(ks[4], d, fs),
+            "w_down": dense_init(ks[5], fs, d),
+        }
+        p["shared_gate"] = dense_init(ks[5], d, 1)
+    return p
+
+
+def _expert_spec(policy: ShardingPolicy):
+    if not policy.enabled:
+        return None
+    return policy.model_axis
+
+
+def moe_apply(p: Dict, cfg: MoEConfig, x: jax.Array,
+              policy: ShardingPolicy = NO_SHARDING
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss).
+
+    GShard-style GROUPED dispatch: each batch row is a routing group, so the
+    position-in-expert cumsum runs along the per-group axis (shardable over
+    `data`) instead of the global token axis (an unshardable global scan
+    that forced XLA to materialize multi-GB replicated dispatch state).
+    The group->expert reshard of the (B, E, C, D) buffer lowers to the
+    canonical MoE all-to-all on the production mesh.
+    """
+    b, s, d = x.shape
+    cd = x.dtype
+    e, k = cfg.num_experts, cfg.top_k
+
+    router_logits = dense(p["router"], x).astype(jnp.float32)    # (B,S,E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch style)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], e), axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # ---- per-group position in expert ----
+    cap = int(cfg.capacity_factor * s * k / e) + 1
+    fe = expert_idx.reshape(b, s * k)                             # (B, Sk)
+    fg = gate_vals.reshape(b, s * k).astype(cd)
+    onehot = jax.nn.one_hot(fe, e, dtype=jnp.int32)               # (B,Sk,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                          # (B, Sk)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap - 1)
+    tok = jnp.repeat(jnp.arange(s), k)[None, :]                   # (1, Sk)
+    bidx = jnp.arange(b)[:, None]
+
+    # ---- dispatch: (B, E, C, D), group-sharded scatter ----
+    contrib = jnp.where(keep[..., None],
+                        x[bidx, jnp.broadcast_to(tok, (b, s * k))], 0)
+    buf = jnp.zeros((b, e, cap, d), cd)
+    buf = buf.at[bidx, fe, pos_c].add(contrib)
+    gspec = P(policy.data_axes, None, None, None)
+    ep_ax = (policy.ep_axis if policy.enabled else None)
+    if ep_ax == "data":
+        ep_ax = policy.fsdp_axis
+    elif ep_ax == "model":
+        ep_ax = policy.model_axis
+    experts_divide = (policy.enabled and ep_ax is not None
+                      and e % policy.size(ep_ax) == 0)
+    if policy.enabled:
+        buf = jax.lax.with_sharding_constraint(buf, gspec)
+        if experts_divide:
+            # group -> expert reshard: THE MoE all-to-all
+            espec = P(None, ep_ax, None, None)
+            buf = jax.lax.with_sharding_constraint(buf, espec)
+        else:
+            # e.g. qwen2-moe's 60 experts on a 16-way axis: keep groups
+            # data-sharded and run experts group-locally (weights gathered)
+            espec = gspec
+
+    # ---- expert computation: (B,E,C,D) x (E,D,F) ----
+    h_gate = jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(cd))
+    h_up = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(cd))
+    h = jax.nn.silu(h_gate) * h_up
+    if policy.enabled:
+        model_free = (not experts_divide) or (policy.ep_axis == "data")
+        fm = (policy.model_axis
+              if (model_free and cfg.d_ff_expert
+                  % policy.size(policy.model_axis) == 0) else None)
+        h = jax.lax.with_sharding_constraint(
+            h, P(espec[0], espec[1], None, fm))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(cd))
+    if policy.enabled:
+        out_buf = jax.lax.with_sharding_constraint(out_buf, espec)
+        if experts_divide:
+            # expert -> group reshard (all-to-all back)
+            out_buf = jax.lax.with_sharding_constraint(out_buf, gspec)
+
+    # ---- combine ----
+    gathered = out_buf[bidx, fe, pos_c]                           # (B,Sk,D)
+    weighted = jnp.where(keep[..., None], gathered, 0) * fg[..., None]
+    out = jnp.zeros((b, s, d), cd)
+    out = out.at[bidx, jnp.broadcast_to(tok, (b, s * k))].add(weighted)
+    out = policy.btd(out)
+
+    # ---- shared experts (qwen2-moe) ----
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(dense(sh["w_gate"], x)) * dense(sh["w_up"], x)
+        hs = policy.btf(hs)
+        shared_out = dense(sh["w_down"], hs)
+        sg = jax.nn.sigmoid(dense(p["shared_gate"], x).astype(jnp.float32))
+        out = out + shared_out * sg.astype(cd)
+
+    return out, aux

@@ -1,0 +1,228 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, true recurrence).
+
+mLSTM is the gated-linear-attention recurrence with per-head scalar forget
+gate -> reuses the chunked GLA core (MXU-friendly).  sLSTM has a nonlinear
+hidden-to-gate dependency and runs as a time scan (its d_model is small in
+xlstm-125m, so the sequential part is cheap relative to the mLSTM stack).
+
+Block layout follows the paper: mLSTM blocks are pre-norm residual with an
+up-projection (factor 2), causal conv, and learnable skip; sLSTM blocks are
+post-up-projection-free with a gated FFN (factor 4/3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (NO_SHARDING, ShardingPolicy, dense,
+                                 dense_init, gated_linear_attention, gla_step,
+                                 rmsnorm, rmsnorm_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2          # mLSTM up-projection
+    d_conv: int = 4
+    ffn_factor: float = 4.0 / 3.0   # sLSTM FFN
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: XLSTMConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    dm, di = cfg.d_model, cfg.d_inner
+    return {
+        "norm": rmsnorm_init(dm),
+        "up_l": dense_init(ks[0], dm, di),       # main path
+        "up_r": dense_init(ks[1], dm, di),       # gate path
+        "conv_w": jax.random.normal(ks[2], (cfg.d_conv, di),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "wq": dense_init(ks[3], di, di),
+        "wk": dense_init(ks[4], di, di),
+        "wv": dense_init(ks[5], di, di),
+        "w_if": dense_init(ks[6], di, 2 * cfg.n_heads),  # input+forget gates
+        "skip": jnp.ones((di,), jnp.float32),
+        "out_norm": rmsnorm_init(di),
+        "down": dense_init(ks[7], di, dm),
+    }
+
+
+def _mlstm_gates(p, xc, cfg: XLSTMConfig):
+    gf = dense(p["w_if"], xc).astype(jnp.float32)
+    i_pre, f_pre = jnp.split(gf, 2, axis=-1)          # (B,T,H)
+    log_f = -jax.nn.softplus(-f_pre)                  # log sigmoid(f)
+    i_gate = jnp.exp(jnp.minimum(i_pre, 0.0))         # stabilized exp input
+    return log_f, i_gate
+
+
+def mlstm_apply(p: Dict, cfg: XLSTMConfig, x: jax.Array,
+                policy: ShardingPolicy = NO_SHARDING,
+                chunk: int = 128) -> jax.Array:
+    b, t, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    xn = rmsnorm(p["norm"], x)
+    left = dense(p["up_l"], xn)
+    right = jax.nn.silu(dense(p["up_r"], xn))
+    # causal conv on the main path
+    k = p["conv_w"].shape[0]
+    cw = p["conv_w"].astype(left.dtype)
+    pad = jnp.zeros((b, k - 1, left.shape[-1]), left.dtype)
+    xp = jnp.concatenate([pad, left], axis=1)
+    xc = sum(xp[:, i:i + t, :] * cw[i][None, None, :]
+             for i in range(k))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(left.dtype))
+
+    q = dense(p["wq"], xc).reshape(b, t, h, hd)
+    kk = dense(p["wk"], xc).reshape(b, t, h, hd) * (hd ** -0.5)
+    v = dense(p["wv"], left).reshape(b, t, h, hd)
+    log_f, i_gate = _mlstm_gates(p, xc, cfg)
+
+    padn = (-t) % chunk
+    if padn:
+        z2 = lambda a: jnp.pad(a, ((0, 0), (0, padn)) + ((0, 0),) *
+                               (a.ndim - 2))
+        q, kk, v, log_f, i_gate = map(z2, (q, kk, v, log_f, i_gate))
+    y = gated_linear_attention(q, kk, v, log_f, i_gate, chunk=chunk,
+                               policy=policy if policy.enabled else None)
+    y = y[:, :t].reshape(b, t, cfg.d_inner)
+    y = rmsnorm(p["out_norm"], y) + xc * p["skip"].astype(x.dtype)
+    y = y * right
+    y = policy.btf(y)
+    return x + dense(p["down"], y)
+
+
+def mlstm_init_cache(cfg: XLSTMConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32),
+    }
+
+
+def mlstm_step(p: Dict, cfg: XLSTMConfig, x: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    b = x.shape[0]
+    h, hd = cfg.n_heads, cfg.head_dim
+    xn = rmsnorm(p["norm"], x)
+    left = dense(p["up_l"], xn)
+    right = jax.nn.silu(dense(p["up_r"], xn))
+    k = p["conv_w"].shape[0]
+    cw = p["conv_w"].astype(left.dtype)
+    xp = jnp.concatenate([cache["conv"].astype(left.dtype), left], axis=1)
+    xc = sum(xp[:, i:i + 1, :] * cw[i][None, None, :]
+             for i in range(k))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(left.dtype))
+    new_conv = xp[:, 1:, :]
+
+    q = dense(p["wq"], xc).reshape(b, h, hd)
+    kk = dense(p["wk"], xc).reshape(b, h, hd) * (hd ** -0.5)
+    v = dense(p["wv"], left).reshape(b, h, hd)
+    log_f, i_gate = _mlstm_gates(p, xc, cfg)
+    y, new_state = gla_step(q, kk, v, log_f[:, 0], i_gate[:, 0],
+                            cache["state"])
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rmsnorm(p["out_norm"], y) + xc * p["skip"].astype(x.dtype)
+    y = y * right
+    return x + dense(p["down"], y), {"conv": new_conv, "state": new_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: XLSTMConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    dm = cfg.d_model
+    hd = dm // cfg.n_heads
+    d_ff = int(cfg.ffn_factor * dm)
+    return {
+        "norm": rmsnorm_init(dm),
+        "w_gates": dense_init(ks[0], dm, 4 * dm),        # i, f, z, o
+        # per-head recurrent matrices (block-diagonal R)
+        "r_gates": jax.random.normal(ks[1], (cfg.n_heads, hd, 4 * hd),
+                                     jnp.float32) * (hd ** -0.5),
+        "out_norm": rmsnorm_init(dm),
+        "ffn_up": dense_init(ks[2], dm, 2 * d_ff),       # gated
+        "ffn_down": dense_init(ks[3], d_ff, dm),
+    }
+
+
+def slstm_cell(p, cfg: XLSTMConfig, wx: jax.Array, state):
+    """wx: (B, 4*D) precomputed input contribution; state: (h, c, n, m)."""
+    h_prev, c_prev, n_prev, m_prev = state
+    b = h_prev.shape[0]
+    nh, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rh = jnp.einsum("bhd,hde->bhe", h_prev.reshape(b, nh, hd),
+                    p["r_gates"]).reshape(b, 4 * cfg.d_model)
+    z_all = (wx + rh).astype(jnp.float32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(z_all, 4, axis=-1)
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = -jax.nn.softplus(-f_pre)
+    m = jnp.maximum(log_f + m_prev, i_pre)
+    i_g = jnp.exp(i_pre - m)
+    f_g = jnp.exp(log_f + m_prev - m)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_g * c_prev + i_g * z
+    n = f_g * n_prev + i_g
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (h, c, n, m)
+
+
+def slstm_apply(p: Dict, cfg: XLSTMConfig, x: jax.Array,
+                policy: ShardingPolicy = NO_SHARDING) -> jax.Array:
+    b, t, dm = x.shape
+    xn = rmsnorm(p["norm"], x)
+    wx = dense(p["w_gates"], xn)                     # (B,T,4D)
+    zeros = jnp.zeros((b, dm), jnp.float32)
+    init = (zeros, zeros, zeros, zeros - 1e9)
+
+    def body(state, wx_t):
+        new = slstm_cell(p, cfg, wx_t, state)
+        return new, new[0]
+
+    _, hs = jax.lax.scan(body, init, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)            # (B,T,D)
+    y = rmsnorm(p["out_norm"], y)
+    up, gate = jnp.split(dense(p["ffn_up"], y), 2, axis=-1)
+    y = dense(p["ffn_down"], jax.nn.gelu(gate) * up)
+    return x + y
+
+
+def slstm_init_cache(cfg: XLSTMConfig, batch: int):
+    dm = cfg.d_model
+    z = jnp.zeros((batch, dm), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z - 1e9}
+
+
+def slstm_step(p: Dict, cfg: XLSTMConfig, x: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    xn = rmsnorm(p["norm"], x)
+    wx = dense(p["w_gates"], xn)[:, 0]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = slstm_cell(p, cfg, wx, state)
+    y = h[:, None, :].astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y)
+    up, gate = jnp.split(dense(p["ffn_up"], y), 2, axis=-1)
+    y = dense(p["ffn_down"], jax.nn.gelu(gate) * up)
+    return x + y, {"h": h, "c": c, "n": n, "m": m}

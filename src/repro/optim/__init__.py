@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (Optimizer, adam, clip_by_global_norm,
+                                    cosine_schedule, sgd, step_decay_schedule)
+from repro.optim.quantized import QuantizedSGDState, quantized_sgd_init, quantized_sgd_step
+
+__all__ = [
+    "Optimizer", "adam", "sgd", "cosine_schedule", "step_decay_schedule",
+    "clip_by_global_norm", "QuantizedSGDState", "quantized_sgd_init",
+    "quantized_sgd_step",
+]

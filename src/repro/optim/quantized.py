@@ -1,0 +1,65 @@
+"""Fixed-point SGD with SGA banking, as a generic optimizer (paper Alg 1).
+
+This wraps the paper's on-chip update rule (weight grid Q1.7, 16-bit SGA
+accumulators, optional RGP noise) into the same pytree-optimizer shape as
+repro.optim.optimizers, so it can drive *any* head — including distributed
+ones (the SGA state shards like a second momentum buffer).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.onchip_training import rgp_noise, sga_step, sga_threshold
+from repro.core.quantize import ACCUM_Q, GRAD_Q, WEIGHT_Q, QFormat
+
+
+class QuantizedSGDState(NamedTuple):
+    step: jax.Array
+    accum: object            # SGA banks, one per parameter leaf
+    key: jax.Array
+
+
+def quantized_sgd_init(params, seed: int = 0) -> QuantizedSGDState:
+    return QuantizedSGDState(
+        step=jnp.zeros((), jnp.int32),
+        accum=jax.tree_util.tree_map(jnp.zeros_like, params),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
+def quantized_sgd_step(grads, state: QuantizedSGDState, params,
+                       lr: jax.Array | float,
+                       sga: bool = True,
+                       rgp_lambda: Optional[float] = None,
+                       weight_fmt: QFormat = WEIGHT_Q,
+                       grad_fmt: QFormat = GRAD_Q,
+                       accum_fmt: QFormat = ACCUM_Q
+                       ) -> Tuple[object, QuantizedSGDState]:
+    lr = jnp.asarray(lr, jnp.float32)
+    g_th = sga_threshold(lr, weight_fmt)
+    key = state.key
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    accum_leaves = treedef.flatten_up_to(state.accum)
+    param_leaves = treedef.flatten_up_to(params)
+
+    new_params, new_accum = [], []
+    for g, a, p in zip(leaves, accum_leaves, param_leaves):
+        g = grad_fmt.quantize(g)
+        if rgp_lambda is not None:
+            key, sub = jax.random.split(key)
+            g = grad_fmt.quantize(g + rgp_noise(sub, g.shape, rgp_lambda,
+                                                grad_fmt))
+        if sga:
+            g, a = sga_step(g, a, g_th, accum_fmt)
+        new_params.append(weight_fmt.quantize(p - lr * g))
+        new_accum.append(a)
+
+    return (jax.tree_util.tree_unflatten(treedef, new_params),
+            QuantizedSGDState(step=state.step + 1,
+                              accum=jax.tree_util.tree_unflatten(treedef,
+                                                                 new_accum),
+                              key=key))

@@ -1,0 +1,3 @@
+from repro.sharding.policy import MeshPolicy
+
+__all__ = ["MeshPolicy"]

@@ -1,0 +1,81 @@
+"""Pipeline parallelism (GPipe-style) as a library feature.
+
+The assigned production mesh (data x model) covers all 40 cells with
+FSDP x TP, but at 1000+-node scale a pipeline axis bounds the FSDP
+all-gather ring size.  This module provides a `pipeline_apply` combinator:
+layers are split into S stages along a `pipe` mesh axis; microbatches
+stream through stages via `jax.lax.ppermute` inside shard_map, giving the
+classic GPipe schedule (S + M - 1 ticks for M microbatches).
+
+Tested in tests/test_pipeline.py on a host-platform mesh; compose with the
+policy module by adding a "pipe" axis to the mesh and passing
+stage-sharded stacked params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(layer_fn: Callable, mesh: Mesh, n_microbatches: int,
+                   axis: str = "pipe"):
+    """Returns fn(stage_params, x) running a GPipe pipeline over ``axis``.
+
+    layer_fn(params_for_stage, x_microbatch) -> x_microbatch applies ONE
+    stage's layers.  stage_params leaves are stacked over stages (leading
+    dim = n_stages, sharded over ``axis``).  x: (batch, ...) with
+    batch % n_microbatches == 0.
+    """
+    n_stages = mesh.shape[axis]
+
+    def stage_program(params, x):
+        # params: this stage's slice (leading dim 1); x: full batch view
+        params = jax.tree_util.tree_map(lambda a: a[0], params)
+        stage = jax.lax.axis_index(axis)
+        mb = x.reshape(n_microbatches, -1, *x.shape[1:])
+        n_ticks = n_stages + n_microbatches - 1
+        buf = jnp.zeros_like(mb[0])
+        outs = jnp.zeros_like(mb)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any)
+            incoming = jnp.where(t < n_microbatches,
+                                 mb[jnp.minimum(t, n_microbatches - 1)],
+                                 jnp.zeros_like(buf))
+            x_in = jnp.where(stage == 0, incoming, buf)
+            y = layer_fn(params, x_in)
+            # pass to the next stage
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage emits microbatch (t - (n_stages - 1))
+            emit_idx = t - (n_stages - 1)
+            valid = ((emit_idx >= 0) & (emit_idx < n_microbatches)
+                     & (stage == n_stages - 1))
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(emit_idx, 0), 0),
+                lambda o: o, outs)
+            return nxt, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # only the last stage holds the outputs; replicate to all stages
+        outs = jax.lax.psum(outs, axis)
+        return outs.reshape(x.shape)
+
+    pspec = jax.tree_util.tree_map(lambda _: P(axis), {"_": 0})["_"]
+
+    def run(stage_params, x):
+        in_specs = (jax.tree_util.tree_map(lambda _: P(axis), stage_params),
+                    P())
+        return shard_map(stage_program, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(), check_rep=False)(stage_params, x)
+
+    return run

@@ -1,0 +1,234 @@
+"""Per-architecture PartitionSpec policy for the production mesh.
+
+Layout (DESIGN.md §5):
+  * batch over ("pod","data") — DP across pods, plain DP within pod;
+  * parameters + optimizer state sharded over "data" (FSDP/ZeRO-3) AND over
+    "model" (TP) — column-parallel up-projections, row-parallel
+    down-projections, expert-parallel MoE stacks, vocab-parallel embeddings;
+  * KV caches: batch over "data", sequence over "model" (decode SP);
+  * every `model`/`data` assignment is guarded by divisibility — anything
+    that doesn't divide evenly is replicated on that axis (correct, just
+    less sharded; XLA propagates the rest).
+
+All functions return PartitionSpec pytrees usable as jit in_shardings /
+out_shardings on the production mesh.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ShardingPolicy
+
+# natural (unstacked) trailing-rank and spec templates per parameter name.
+# 'C' = column-parallel last dim, 'R' = row-parallel first-of-two,
+# 'E' = expert-stacked 3D, 'V' = vocab-parallel, '-' = replicate.
+_RULES = [
+    (r"(wq|wk|wv|w_up|w_gate|up_l|up_r|in_proj|w_gates|ffn_up|w_if)/w$", "C"),
+    (r"(wo|w_down|down|out_proj|ffn_down)/w$", "R"),
+    (r"(wq|wk|wv|wo|w_up|w_gate|w_down|up_l|up_r|in_proj|out_proj|"
+     r"w_gates|ffn_up|ffn_down|down|w_if)/b$", "B"),
+    (r"router/w$", "Crep"),       # router: small, replicate cols
+    (r"router/b$", "-"),
+    (r"moe/w_gate$", "E"), (r"moe/w_up$", "E"), (r"moe/w_down$", "Ed"),
+    (r"shared/w_gate/w$", "C"), (r"shared/w_up/w$", "C"),
+    (r"shared/w_down/w$", "R"), (r"shared_gate/w$", "Crep"),
+    (r"conv_w$", "Conv"), (r"conv_b$", "Bc"),
+    (r"r_gates$", "-"),
+    (r"embed$", "V"), (r"unembed$", "Vt"),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class MeshPolicy:
+    """Factory for sharding specs on a given mesh.
+
+    §Perf knobs (EXPERIMENTS.md):
+      no_fsdp     — replicate params over `data` (small models: the FSDP
+                    all-gather dwarfs compute; DP grad sync remains);
+      ep_axis     — "model" (baseline) or "data": MoE experts stationary on
+                    the data axis, expert FFN TP over model;
+      serve_mode  — weight-stationary inference: params 2D-sharded, batch
+                    replicated, KV cache (seq over data, head_dim over
+                    model); per-matmul collectives are activation-sized
+                    (the paper's in-SRAM weights-never-move principle).
+    """
+
+    def __init__(self, mesh: Mesh, *, no_fsdp: bool = False,
+                 ep_axis: str = "model", serve_mode: bool = False,
+                 pure_dp: bool = False):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.has_pod = "pod" in names
+        self.data_axes: Tuple[str, ...] = (("pod", "data") if self.has_pod
+                                           else ("data",))
+        self.model_axis = "model" if "model" in names else None
+        self.fsdp_axis = ("data" if ("data" in names and not no_fsdp)
+                          else None)
+        if pure_dp:
+            # small models: model parallelism on a 16-way axis costs more in
+            # activation reshards than it saves; fold the model axis into
+            # data parallelism and replicate params (§Perf hillclimb 1)
+            self.data_axes = self.data_axes + (("model",)
+                                               if "model" in names else ())
+            self.model_axis = None
+            self.fsdp_axis = None
+        self.ep_axis_name = ep_axis
+        self.serve_mode = serve_mode
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    # -- helpers ----------------------------------------------------------
+    def _fits(self, dim: int, axis) -> bool:
+        if axis is None:
+            return False
+        n = (np.prod([self.sizes[a] for a in axis])
+             if isinstance(axis, tuple) else self.sizes[axis])
+        return dim % int(n) == 0
+
+    def _m(self, dim: int):
+        return self.model_axis if self._fits(dim, self.model_axis) else None
+
+    def _f(self, dim: int):
+        return self.fsdp_axis if self._fits(dim, self.fsdp_axis) else None
+
+    def _b(self, dim: int):
+        """Batch axes (largest prefix of data_axes that divides dim)."""
+        if self._fits(dim, self.data_axes):
+            return self.data_axes
+        if self.has_pod and self._fits(dim, ("data",)):
+            return ("data",)
+        return None
+
+    def activation_policy(self) -> ShardingPolicy:
+        return ShardingPolicy(data_axes=self.data_axes,
+                              model_axis=self.model_axis,
+                              fsdp_axis=self.fsdp_axis, enabled=True,
+                              axis_sizes=self.sizes,
+                              ep_axis=self.ep_axis_name,
+                              serve_mode=self.serve_mode)
+
+    # -- parameter specs ---------------------------------------------------
+    def _leaf_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        kind = None
+        for pat, k in _RULES:
+            if re.search(pat, path):
+                kind = k
+                break
+        nd = len(shape)
+
+        def pad(spec_tail):
+            """prepend None for stacked leading dims"""
+            return P(*([None] * (nd - len(spec_tail)) + list(spec_tail)))
+
+        if kind == "C":
+            return pad([self._f(shape[-2]), self._m(shape[-1])])
+        if kind == "R":
+            return pad([self._m(shape[-2]), self._f(shape[-1])])
+        if kind in ("B", "Bc"):
+            return pad([self._m(shape[-1])])
+        if kind == "Crep":
+            return pad([self._f(shape[-2]), None])
+        if kind == "E":      # (E, D, F)
+            if self.ep_axis_name == "data" and self._fits(shape[-3], "data"):
+                # experts stationary over data, FFN TP over model: no
+                # per-step expert weight gathers (§Perf hillclimb 2)
+                return pad(["data", None, self._m(shape[-1])])
+            if self._m(shape[-3]):   # baseline: experts over model, FSDP D
+                return pad([self._m(shape[-3]), self._f(shape[-2]), None])
+            # expert count not divisible (qwen2-moe: 60 on a 16-way axis):
+            # shard the ffn dim over model instead — otherwise 12B of expert
+            # weights (+Adam moments) are only fsdp-sharded (9.4GB/device)
+            return pad([None, self._f(shape[-2]), self._m(shape[-1])])
+        if kind == "Ed":     # (E, F, D)
+            if self.ep_axis_name == "data" and self._fits(shape[-3], "data"):
+                return pad(["data", self._m(shape[-2]), None])
+            if self._m(shape[-3]):
+                return pad([self._m(shape[-3]), None, self._f(shape[-2])])
+            return pad([None, self._m(shape[-2]), self._f(shape[-1])])
+        if kind == "Conv":   # (K, C)
+            return pad([None, self._m(shape[-1])])
+        # Embedding table: shard the FEATURE dim over model — a token gather
+        # from a d-sharded table is local per shard.  (Vocab-sharding the
+        # table turns lookup/scatter into XLA's replicate-then-repartition
+        # fallback: ~120GB/step of full-vocab fp32 traffic at train_4k.)
+        if kind == "V":      # (Vpad, D)
+            return P(None, self._m(shape[1]))
+        # Unembed: vocab-parallel (the logits matmul and the fused CE loss
+        # keep every (B,S,V) intermediate vocab-sharded; D over fsdp would
+        # conflict with batch-over-data — see lm_loss docstring).
+        if kind == "Vt":     # (D, Vpad)
+            return P(None, self._m(shape[1]))
+        # default: replicate scalars/vectors; FSDP the biggest dim of big
+        # tensors if possible
+        if nd >= 2 and shape[-1] >= 1024 and self._f(shape[-1]):
+            return pad([None, self._f(shape[-1])])
+        return P()
+
+    def param_specs(self, params) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self._leaf_spec(_path_str(path), leaf.shape),
+            params)
+
+    def opt_state_specs(self, opt_state, param_specs) -> Any:
+        """Adam moments shard like params; step counters replicate."""
+        def map_like(x):
+            if isinstance(x, type(None)):
+                return None
+            return x
+        # OptState(step, mu, nu) where mu/nu mirror params (or None)
+        from repro.optim.optimizers import OptState
+        mu = param_specs if opt_state.mu is not None else None
+        nu = param_specs if opt_state.nu is not None else None
+        return OptState(step=P(), mu=mu, nu=nu)
+
+    # -- data / cache specs -------------------------------------------------
+    def batch_specs(self, batch_shape_tree) -> Any:
+        """tokens/labels (B, S) -> P(batch_axes, None); frames (B,S,D)."""
+        def spec(x):
+            if len(x.shape) == 0:               # scalars (decode index)
+                return P()
+            b = self._b(x.shape[0])
+            return P(*([b] + [None] * (len(x.shape) - 1)))
+        return jax.tree_util.tree_map(spec, batch_shape_tree)
+
+    def kv_cache_spec(self, shape) -> P:
+        """(L, B, S, H, hd): batch->data, seq->model (decode SP).
+        Serve mode: seq->data, head_dim->model (weight-stationary TP)."""
+        # batch over data, seq over model (decode SP) — in serve mode the
+        # cache WRITE uses the masked-where form (no DUS fallback)
+        return P(None, self._b(shape[1]), self._m(shape[2]), None, None)
+
+    def cache_specs(self, cache_tree) -> Any:
+        def spec(x):
+            s = x.shape
+            if len(s) == 5:                     # stacked attention kv
+                return self.kv_cache_spec(s)
+            if len(s) == 4:                     # (L,B,K-1,C) conv or (B,H,d,d)
+                return P(None, self._b(s[1]), None, self._m(s[-1]))
+            if len(s) == 3:                     # (L?,B,C)
+                return P(None, self._b(s[1]), None)
+            if len(s) == 2:                     # (B, D) slstm state
+                return P(self._b(s[0]), None)
+            return P(*([None] * len(s)))
+        return jax.tree_util.tree_map(spec, cache_tree)
+
+    def shardings(self, spec_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))

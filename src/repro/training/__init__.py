@@ -1,0 +1,3 @@
+from repro.training import kws
+
+__all__ = ["kws"]

@@ -1,0 +1,216 @@
+"""Training / recovery / customization drivers for the KWS model.
+
+Covers the three phases of the paper:
+  1. base QAT training on the GSCD-like corpus (§VI-A3, Adam),
+  2. non-ideal-effect recovery: bias compensation + noise-aware fine-tuning
+     (§IV-B, Table III),
+  3. on-chip customization of the classifier head on the personal set
+     (§III, Table IV) — delegated to repro.core.onchip_training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compensation, imc
+from repro.models import kws
+from repro.optim import adam, cosine_schedule
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    epochs: int = 30
+    batch_size: int = 60
+    lr: float = 0.01               # paper: Adam, lr 0.01 decayed
+    lr_min: float = 1e-6
+    seed: int = 0
+    log_every: int = 50
+    # annealed binarization: (fraction_of_epochs, alpha); None alpha = hard
+    # (final hard phase adapts thresholds/head to the exact sign() features)
+    # positive = tanh soft, negative = hard-forward surrogate-grad phase
+    alpha_schedule: tuple = ((0.4, 2.0), (0.6, 5.0), (0.75, 12.0),
+                             (0.9, -5.0), (1.0, -10.0))
+    # polarization pull of latent weights toward +/-1 during soft phases
+    polarize_weight: float = 1e-3
+
+
+def _alpha_at(tcfg: "TrainConfig", epoch: int):
+    frac = (epoch + 1) / max(1, tcfg.epochs)
+    for upto, alpha in tcfg.alpha_schedule:
+        if frac <= upto:
+            return alpha
+    return tcfg.alpha_schedule[-1][1] if tcfg.alpha_schedule else None
+
+
+def _batches(x: np.ndarray, y: np.ndarray, bs: int, rng: np.random.Generator):
+    idx = rng.permutation(len(y))
+    for i in range(0, len(y) - bs + 1, bs):
+        j = idx[i:i + bs]
+        yield x[j], y[j]
+
+
+def train_base(xtr: np.ndarray, ytr: np.ndarray,
+               cfg: kws.KWSConfig = kws.PAPER_KWS,
+               tcfg: TrainConfig = TrainConfig(),
+               params=None, state=None,
+               chip_offsets: Optional[Dict[str, jax.Array]] = None,
+               sa_noise_std: float = 0.0,
+               verbose: bool = True):
+    """QAT training.  With chip_offsets/sa_noise_std set this is the paper's
+    noise-aware recovery fine-tuning (start from trained params)."""
+    if params is None:
+        params = kws.init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+    if state is None:
+        state = kws.init_state(cfg)
+
+    steps_per_epoch = max(1, len(ytr) // tcfg.batch_size)
+    opt = adam(cosine_schedule(tcfg.lr, tcfg.epochs * steps_per_epoch,
+                               warmup_steps=steps_per_epoch // 2,
+                               min_lr=tcfg.lr_min))
+    opt_state = opt.init(params)
+
+    def clamp_latents(p):
+        """BNN practice: keep latent weights inside the quantizer range so
+        STE gradients stay alive (clip-STE blocks out-of-range grads)."""
+        p = dict(p)
+        for i in range(1, cfg.num_conv_layers):
+            name = f"conv{i}"
+            g = p[name]["gamma"]
+            g = jnp.where(jnp.abs(g) < 0.05,
+                          jnp.where(g >= 0, 0.05, -0.05), g)
+            p[name] = {**p[name], "w": jnp.clip(p[name]["w"], -1.0, 1.0),
+                       "gamma": g}
+        from repro.core.quantize import WEIGHT_Q
+        p["fc"] = {"w": jnp.clip(p["fc"]["w"], -WEIGHT_Q.max_value,
+                                 WEIGHT_Q.max_value),
+                   "b": jnp.clip(p["fc"]["b"], -WEIGHT_Q.max_value,
+                                 WEIGHT_Q.max_value)}
+        return p
+
+    @functools.partial(jax.jit, static_argnames=("soft_alpha",))
+    def step(params, opt_state, state, x, y, rng, soft_alpha):
+        def loss_fn(p):
+            logits, new_state = kws.forward_train(
+                p, state, x, cfg, chip_offsets=chip_offsets,
+                sa_noise_std=sa_noise_std, rng=rng, soft_alpha=soft_alpha)
+            loss = kws.cross_entropy(logits, y)
+            if soft_alpha is not None and tcfg.polarize_weight:
+                # pull latent conv weights toward +/-1 so the final hard
+                # binarization is a small perturbation
+                pol = sum(jnp.mean((1.0 - p[f"conv{i}"]["w"] ** 2) ** 2)
+                          for i in range(1, cfg.num_conv_layers))
+                loss = loss + tcfg.polarize_weight * pol
+            return loss, (logits, new_state)
+        (loss, (logits, new_state)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state = opt.update(grads, opt_state, params)
+        params = clamp_latents(params)
+        return params, opt_state, new_state, loss, kws.accuracy(logits, y)
+
+    rng = np.random.default_rng(tcfg.seed)
+    key = jax.random.PRNGKey(tcfg.seed + 1)
+    t0 = time.time()
+    it = 0
+    for epoch in range(tcfg.epochs):
+        alpha = _alpha_at(tcfg, epoch)
+        for xb, yb in _batches(xtr, ytr, tcfg.batch_size, rng):
+            key, sub = jax.random.split(key)
+            params, opt_state, state, loss, acc = step(
+                params, opt_state, state, jnp.asarray(xb), jnp.asarray(yb),
+                sub, alpha)
+            it += 1
+            if verbose and it % tcfg.log_every == 0:
+                print(f"  epoch {epoch} it {it} a={alpha} "
+                      f"loss {float(loss):.4f} acc {float(acc):.3f} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+    return params, state
+
+
+def evaluate(params, state, x: np.ndarray, y: np.ndarray,
+             cfg: kws.KWSConfig = kws.PAPER_KWS, batch: int = 200) -> float:
+    fwd = jax.jit(lambda xb: kws.forward_eval(params, state, xb, cfg)[0])
+    correct = 0
+    for i in range(0, len(y), batch):
+        logits = fwd(jnp.asarray(x[i:i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1)
+                               == jnp.asarray(y[i:i + batch])))
+    return correct / len(y)
+
+
+def evaluate_hw(hw: kws.HWParams, x: np.ndarray, y: np.ndarray,
+                cfg: kws.KWSConfig = kws.PAPER_KWS,
+                chip_offsets=None, sa_noise_std: float = 0.0,
+                seed: int = 0, batch: int = 200,
+                use_kernel: bool = False) -> float:
+    fwd = jax.jit(lambda xb, k: kws.hw_forward(
+        hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
+        rng=k, use_kernel=use_kernel)[0])
+    correct, key = 0, jax.random.PRNGKey(seed)
+    for i in range(0, len(y), batch):
+        key, sub = jax.random.split(key)
+        logits = fwd(jnp.asarray(x[i:i + batch]), sub)
+        correct += int(jnp.sum(jnp.argmax(logits, -1)
+                               == jnp.asarray(y[i:i + batch])))
+    return correct / len(y)
+
+
+def hw_features(hw: kws.HWParams, x: np.ndarray,
+                cfg: kws.KWSConfig = kws.PAPER_KWS,
+                chip_offsets=None, sa_noise_std: float = 0.0,
+                seed: int = 0, batch: int = 200) -> np.ndarray:
+    """GAP features through the hardware path — the customization feature
+    buffer (§V-C stores these in SRAM for reuse across epochs)."""
+    fwd = jax.jit(lambda xb, k: kws.hw_forward(
+        hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
+        rng=k)[1])
+    outs, key = [], jax.random.PRNGKey(seed)
+    for i in range(0, len(x), batch):
+        key, sub = jax.random.split(key)
+        outs.append(np.asarray(fwd(jnp.asarray(x[i:i + batch]), sub)))
+    return np.concatenate(outs, axis=0)
+
+
+def calibrate_and_compensate(hw: kws.HWParams, xcal: np.ndarray,
+                             chip_offsets: Dict[str, jax.Array],
+                             cfg: kws.KWSConfig = kws.PAPER_KWS,
+                             macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
+                             sa_noise_std: float = 1.0,
+                             seed: int = 0) -> kws.HWParams:
+    """Paper §IV-B: estimate per-channel MAV offsets via the chip's TEST
+    MODE (Fig 8) and fold the compensation into the in-memory BN biases.
+
+    The test mode drives each macro with KNOWN input patterns and reads its
+    (pre-SA) MAV result, so the measurement is layer-LOCAL with matched
+    inputs — NOT a chained noisy forward (chaining corrupts deeper layers'
+    inputs and the per-channel estimate degenerates: est err ~6 counts for
+    offset std 8 in our ablation).  We simulate exactly that measurement:
+    ideal counts + the chip's static offset + fresh SA noise per read,
+    averaged over the calibration patterns."""
+    xc = jnp.asarray(xcal)
+
+    @jax.jit
+    def ideal_counts():
+        _, _, log = kws.hw_forward(hw, xc, cfg, chip_offsets=None,
+                                   sa_noise_std=0.0, collect_counts=True)
+        return log
+
+    ideal_log = ideal_counts()
+    key = jax.random.PRNGKey(seed)
+    new_bias = dict(hw.bias)
+    for name in cfg.imc_layer_names():
+        key, sub = jax.random.split(key)
+        measured = (ideal_log[name] + chip_offsets[name]
+                    + sa_noise_std * jax.random.normal(
+                        sub, ideal_log[name].shape))
+        est = compensation.estimate_channel_offsets(ideal_log[name],
+                                                    measured)
+        new_bias[name] = compensation.compensate_bias(hw.bias[name], est,
+                                                      macro)
+    return hw._replace(bias=new_bias)

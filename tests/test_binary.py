@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.binary import (binarize, binarize_sg, channel_shuffle,
+                               or_maxpool, rsign)
+
+
+def test_binarize_values_and_ste():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.5, 2.0])
+    np.testing.assert_array_equal(np.asarray(binarize(x)),
+                                  [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(binarize(x)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_binarize_sg_forward_hard_backward_smooth():
+    x = jnp.asarray([-0.5, 0.0, 0.5])
+    np.testing.assert_array_equal(np.asarray(binarize_sg(x, 5.0)),
+                                  [-1, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(binarize_sg(x, 5.0)))(x)
+    # surrogate: alpha * sech^2(alpha x); peaked at 0
+    assert float(g[1]) == 5.0
+    assert 0 < float(g[0]) < 5.0
+
+
+def test_rsign_offset_shifts_threshold():
+    x = jnp.zeros((1, 4, 2))
+    out_pos = rsign(x, jnp.asarray([0.1, 0.1]))
+    out_neg = rsign(x, jnp.asarray([-0.1, -0.1]))
+    assert np.all(np.asarray(out_pos) == 1)
+    assert np.all(np.asarray(out_neg) == -1)
+
+
+def test_channel_shuffle_is_permutation():
+    x = jnp.arange(12.0).reshape(1, 1, 12)
+    y = channel_shuffle(x, 3)
+    assert sorted(np.asarray(y).ravel()) == sorted(np.asarray(x).ravel())
+    assert not np.array_equal(np.asarray(y), np.asarray(x))
+    # groups=1 is identity
+    np.testing.assert_array_equal(np.asarray(channel_shuffle(x, 1)),
+                                  np.asarray(x))
+
+
+def test_or_maxpool_is_or():
+    x = jnp.asarray([[-1, -1, 1, -1, 1, 1]], jnp.float32)[..., None]
+    y = or_maxpool(x, 2, axis=1)
+    np.testing.assert_array_equal(np.asarray(y)[0, :, 0], [-1, 1, 1])

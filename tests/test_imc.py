@@ -1,0 +1,93 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import imc
+from repro.core.binary import binarize
+
+
+def test_bias_parity_and_range():
+    b = jnp.linspace(-200, 200, 401)
+    for method in imc.BIAS_MAPPING_METHODS:
+        q = np.asarray(imc.map_bias(b, method))
+        assert np.all(q % 2 == 0), method          # 64-wide array: even only
+        assert np.all(np.abs(q) <= 64), method     # one word line of cells
+
+
+@given(st.floats(-100, 100, allow_nan=False, width=32))
+@settings(max_examples=60, deadline=None)
+def test_bias_mapping_semantics(b):
+    b = float(np.float32(b))       # match the on-device precision
+    if 0 < abs(b) < 1e-30:
+        return                     # XLA flushes subnormals to zero
+    add = float(imc.map_bias(jnp.asarray(b), "add"))
+    sub = float(imc.map_bias(jnp.asarray(b), "sub"))
+    best = float(imc.map_bias(jnp.asarray(b), "best"))
+    if abs(b) <= 62:
+        assert sub <= b <= add
+        assert abs(best - b) <= 1.0 + 1e-6         # nearest even within 1
+
+
+def test_fold_bn_sign_flip():
+    gamma = jnp.asarray([2.0, -1.5])
+    beta = jnp.asarray([0.3, 0.3])
+    mean = jnp.asarray([1.0, 1.0])
+    var = jnp.asarray([4.0, 4.0])
+    off = jnp.asarray([0.0, 0.0])
+    bias, flip = imc.fold_bn_to_bias(gamma, beta, mean, var, off)
+    counts = jnp.asarray([[0.5, 0.5]])
+    # reference: sign of BN output
+    ref = jnp.sign(gamma * (counts - mean) / jnp.sqrt(var + 1e-5) + beta)
+    got = binarize((counts + bias) * flip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref))
+
+
+def test_mav_sa_noise_determinism():
+    counts = jnp.zeros((4, 7, 8))
+    bias = jnp.zeros((8,))
+    flip = jnp.ones((8,))
+    k = jax.random.PRNGKey(3)
+    a = imc.mav_sa(counts, bias, flip, sa_key=k, sa_noise_std=1.0)
+    b = imc.mav_sa(counts, bias, flip, sa_key=k, sa_noise_std=1.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert set(np.unique(np.asarray(a))) <= {-1.0, 1.0}
+
+
+def test_chip_offsets_reproducible_per_seed():
+    ch = {"conv1": 8, "conv2": 16}
+    noise = imc.IMCNoiseParams(mav_offset_std=4.0)
+    o1 = imc.sample_chip_offsets(jax.random.PRNGKey(7), ch, noise)
+    o2 = imc.sample_chip_offsets(jax.random.PRNGKey(7), ch, noise)
+    o3 = imc.sample_chip_offsets(jax.random.PRNGKey(8), ch, noise)
+    np.testing.assert_array_equal(np.asarray(o1["conv1"]),
+                                  np.asarray(o2["conv1"]))
+    assert not np.allclose(np.asarray(o1["conv1"]), np.asarray(o3["conv1"]))
+
+
+def test_binary_group_conv_counts_integer():
+    key = jax.random.PRNGKey(0)
+    x = binarize(jax.random.normal(key, (2, 20, 8)))
+    w = binarize(jax.random.normal(jax.random.fold_in(key, 1), (3, 4, 16)))
+    counts = imc.binary_group_conv_counts(x, w, groups=2)
+    c = np.asarray(counts)
+    assert c.shape == (2, 18, 16)
+    assert np.all(c == np.round(c))
+    assert np.all(np.abs(c) <= 12)                # fan-in 4*3
+    # parity: sum of 12 (+/-1)s is even
+    assert np.all(c % 2 == 0)
+
+
+def test_macro_allocation_matches_chip():
+    """CIM SRAM budget: paper uses 7 macros of 4KB for L2..L6 (Fig 14/17)."""
+    from repro.models.kws import PAPER_KWS
+    total = 0
+    for i in range(1, PAPER_KWS.num_conv_layers):
+        m = imc.map_layer_to_macros(
+            f"conv{i}", PAPER_KWS.channels[i], PAPER_KWS.channels_per_group,
+            PAPER_KWS.kernels[i], 1.0)
+        total += m.macros
+    # paper: 7 (exact per-bank packing is not recoverable from the text;
+    # our capacity model books the bias word-lines separately)
+    assert 5 <= total <= 10

@@ -1,0 +1,111 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.onchip_training import (OnChipTrainConfig, head_accuracy,
+                                        lut_softmax, quantized_head_finetune,
+                                        rgp_noise, sga_step, sga_threshold)
+from repro.core.quantize import ACCUM_Q, ACT_Q, GRAD_Q, WEIGHT_Q
+
+
+def test_lut_softmax_close_to_float():
+    logits = ACT_Q.quantize(jax.random.normal(jax.random.PRNGKey(0),
+                                              (32, 10)) * 2)
+    p = lut_softmax(logits)
+    ref = jax.nn.softmax(logits, axis=-1)
+    assert float(jnp.max(jnp.abs(p - ref))) < 0.03     # 8-bit division grid
+    np.testing.assert_allclose(np.asarray(jnp.sum(p, -1)), 1.0, atol=0.1)
+    # argmax preserved (the decision the chip needs)
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(p, -1)),
+                                  np.asarray(jnp.argmax(ref, -1)))
+
+
+def test_sga_threshold_eq3():
+    # Table I / Eq (3): min(weight)=1/128
+    assert abs(float(sga_threshold(0.05)) - 0.078125) < 1e-6
+    assert abs(float(sga_threshold(0.01)) - 0.390625) < 1e-6
+
+
+def test_sga_small_gradients_bank_and_fire():
+    g_th = jnp.asarray(0.1)
+    g = jnp.full((4,), 0.04)
+    accum = jnp.zeros((4,))
+    fired = []
+    for _ in range(5):
+        upd, accum = sga_step(g, accum, g_th)
+        fired.append(np.asarray(upd))
+    fired = np.stack(fired)
+    # updates are zero until the bank crosses the threshold, then release
+    assert np.all(fired[0] == 0) and np.all(fired[1] == 0)
+    assert fired.sum() > 0
+    # released mass approximates the banked gradient sum (16-bit grid)
+    total = fired.sum(axis=0) + np.asarray(accum)
+    np.testing.assert_allclose(total, 0.2, atol=ACCUM_Q.scale * 10)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_sga_never_loses_gradient_mass(seed):
+    """Property: banked + released == sum of applied gradients (up to the
+    16-bit accumulator grid) — the error-feedback invariant."""
+    key = jax.random.PRNGKey(seed)
+    g_th = jnp.asarray(0.2)
+    gs = jax.random.uniform(key, (20, 8), minval=-0.15, maxval=0.15)
+    accum = jnp.zeros((8,))
+    released = jnp.zeros((8,))
+    for t in range(20):
+        upd, accum = sga_step(gs[t], accum, g_th)
+        released = released + upd
+    total = np.asarray(released + accum)
+    want = np.asarray(jnp.sum(gs, axis=0))
+    np.testing.assert_allclose(total, want, atol=20 * ACCUM_Q.scale + 1e-6)
+
+
+def test_large_gradients_pass_through():
+    g = jnp.asarray([0.5, -0.7])
+    upd, accum = sga_step(g, jnp.zeros(2), jnp.asarray(0.1))
+    np.testing.assert_allclose(np.asarray(upd), np.asarray(g))
+    np.testing.assert_allclose(np.asarray(accum), 0.0)
+
+
+def test_rgp_noise_on_grid():
+    n = rgp_noise(jax.random.PRNGKey(0), (1000,), lam=8.0)
+    codes = np.asarray(n) * 128
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-5)
+    assert np.abs(np.asarray(n)).mean() < 0.2
+
+
+def _toy_head_problem(n=90, d=64, c=10, seed=0, sep=2.0):
+    """Linearly separable features like the customization setting."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(c, d)) * sep / np.sqrt(d)
+    y = np.repeat(np.arange(c), n // c)
+    x = centers[y] + 0.3 * rng.normal(size=(len(y), d)) / np.sqrt(d)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+def test_quantized_finetune_recovers_accuracy():
+    """The paper's Table IV structure on a toy head: naive quantized FT is
+    poor; + error scaling + SGA approaches the FP baseline."""
+    x, y = _toy_head_problem()
+    d, c = x.shape[1], 10
+    k = jax.random.PRNGKey(1)
+    w0 = jax.random.normal(k, (d, c)) * 0.05
+    b0 = jnp.zeros((c,))
+
+    accs = {}
+    for name, kw in {
+        "fp": dict(quantized=False, epochs=300),
+        "naive": dict(quantized=True, error_scaling=False, sga=False,
+                      epochs=300),
+        "es_sga": dict(quantized=True, error_scaling=True, sga=True,
+                       epochs=300),
+    }.items():
+        cfg = OnChipTrainConfig(**kw)
+        w, b = quantized_head_finetune(x, y, w0, b0, cfg)
+        accs[name] = float(head_accuracy(x, y, w, b, cfg))
+    assert accs["fp"] > 0.9
+    assert accs["es_sga"] >= accs["naive"] - 0.05
+    assert accs["es_sga"] > 0.8

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (ACCUM_Q, ACT_Q, ERROR_Q, GRAD_Q, WEIGHT_Q,
+                                 QFormat, error_scale_exponent, scale_error)
+
+FORMATS = [WEIGHT_Q, ACT_Q, GRAD_Q, ERROR_Q, ACCUM_Q]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+def test_grid_roundtrip(fmt):
+    # every representable code maps to itself
+    codes = np.arange(fmt.qmin, fmt.qmax + 1)
+    vals = codes * fmt.scale
+    q = fmt.quantize(jnp.asarray(vals))
+    np.testing.assert_allclose(np.asarray(q), vals, atol=0)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=str)
+def test_saturation(fmt):
+    assert float(fmt.quantize(jnp.asarray(1e9))) == fmt.max_value
+    assert float(fmt.quantize(jnp.asarray(-1e9))) == fmt.min_value
+
+
+@given(st.lists(st.floats(-3, 3, allow_nan=False), min_size=1, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_quantize_is_nearest_grid_point(vals):
+    fmt = WEIGHT_Q
+    x = np.asarray(vals, np.float32)
+    q = np.asarray(fmt.quantize(jnp.asarray(x)))
+    # error bounded by half an LSB inside the range
+    inside = (x >= fmt.min_value) & (x <= fmt.max_value)
+    assert np.all(np.abs(q[inside] - x[inside]) <= fmt.scale / 2 + 1e-7)
+
+
+def test_ste_gradient_clipped():
+    fmt = WEIGHT_Q
+    g = jax.grad(lambda x: jnp.sum(fmt.quantize_ste(x)))(
+        jnp.asarray([0.5, 0.99, 2.0, -3.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_error_scale_exponent_matches_eq2():
+    err = jnp.asarray([0.001, -0.003, 0.002])   # all below half an LSB
+    s = int(error_scale_exponent(err))
+    assert s == int(np.ceil(np.log2(1.0 / 0.003)))
+    scaled, scale = scale_error(err)
+    # saturating quantization may clamp at qmin (= -1.0 for Q1.7)
+    assert float(jnp.max(jnp.abs(scaled))) <= -ERROR_Q.min_value + 1e-9
+    # scaling rescues sub-LSB errors from truncation to zero
+    assert float(jnp.sum(jnp.abs(ERROR_Q.quantize(err)))) == 0.0
+    assert float(jnp.sum(jnp.abs(scaled))) > 0.0
+
+
+def test_fixed_hardware_scale():
+    err = jnp.asarray([0.001, -0.004, 0.002])
+    scaled, scale = scale_error(err, fixed_scale=1.375)
+    assert float(scale) == 1.375
+
+
+def test_paper_formats():
+    assert WEIGHT_Q.total_bits == 8 and WEIGHT_Q.scale == 1 / 128
+    assert ACT_Q.total_bits == 8 and ACT_Q.scale == 1 / 16
+    assert ACT_Q.max_value == 127 / 16 and ACT_Q.min_value == -8.0
+    assert ACCUM_Q.total_bits == 16
