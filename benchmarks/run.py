@@ -8,6 +8,10 @@ the table functions degrade to "run benchmarks.kws_experiments first"
 markers instead of silently re-running multi-minute jobs.
 
 Run:  PYTHONPATH=src python -m benchmarks.run
+      PYTHONPATH=src python -m benchmarks.run --imc-fused
+          (fused-vs-group-loop IMC layer benchmark; writes the per-layer and
+           end-to-end hw_forward decisions/sec record to
+           results/BENCH_imc_fused.json)
 """
 
 from __future__ import annotations
@@ -154,17 +158,20 @@ def kernel_bench() -> None:
     from repro.kernels.sga_update.sga_update import sga_update
     from repro.kernels.sga_update.ref import sga_update_ref
 
-    k = jax.random.PRNGKey(0)
-    x = jnp.where(jax.random.bernoulli(k, 0.5, (512, 128)), 1.0, -1.0)
-    w = jnp.where(jax.random.bernoulli(k, 0.5, (128, 128)), 1.0, -1.0)
+    # independent keys per operand: reusing one key correlates x with w
+    # (and xq with wq), which skews the agree/disagree statistics the ±1
+    # and int8 kernels are exercised on
+    kx, kw, kxq, kwq, kwv, kgv = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jnp.where(jax.random.bernoulli(kx, 0.5, (512, 128)), 1.0, -1.0)
+    w = jnp.where(jax.random.bernoulli(kw, 0.5, (128, 128)), 1.0, -1.0)
     bias = jnp.zeros((128,))
     flip = jnp.ones((128,))
     us = _time_us(lambda: mav_ops.mav_matmul(x, w, bias, flip))
     us_ref = _time_us(jax.jit(lambda: imc_mav_ref(x, w, bias, flip)))
     _row("kernel_imc_mav_512x128x128", f"{us:.0f}", f"ref_us={us_ref:.0f}")
 
-    xq = jax.random.randint(k, (512, 128), -127, 128, jnp.int8)
-    wq = jax.random.randint(k, (128, 128), -127, 128, jnp.int8)
+    xq = jax.random.randint(kxq, (512, 128), -127, 128, jnp.int8)
+    wq = jax.random.randint(kwq, (128, 128), -127, 128, jnp.int8)
     bq = jnp.zeros((128,), jnp.int32)
     us = _time_us(lambda: int8_matmul(xq, wq, bq, shift=7))
     us_ref = _time_us(jax.jit(lambda: int8_matmul_ref(xq, wq, bq, shift=7)))
@@ -172,8 +179,8 @@ def kernel_bench() -> None:
          f"ref_us={us_ref:.0f}")
 
     n = 8192
-    wv = jax.random.uniform(k, (n,), minval=-1, maxval=1)
-    gv = jax.random.normal(k, (n,)) * 0.01
+    wv = jax.random.uniform(kwv, (n,), minval=-1, maxval=1)
+    gv = jax.random.normal(kgv, (n,)) * 0.01
     av = jnp.zeros((n,))
     us = _time_us(lambda: sga_update(wv, gv, av, lr=1 / 16, g_th=0.078125))
     us_ref = _time_us(jax.jit(
@@ -181,8 +188,164 @@ def kernel_bench() -> None:
     _row("kernel_sga_update_8192", f"{us:.0f}", f"ref_us={us_ref:.0f}")
 
 
-def main() -> None:
+# ---------------------------------------------------------------------------
+# Fused IMC layer: per-layer + end-to-end hw_forward decisions/sec
+# ---------------------------------------------------------------------------
+
+
+def _grouploop_hw_forward(hw, x, cfg):
+    """End-to-end seed baseline: one tiny pallas_call per conv group
+    (conv_mav loop) with the digital shuffle/pool in jnp — the path the
+    fused kernel replaces."""
+    import jax.numpy as jnp
+    from repro.core import imc
+    from repro.core.binary import channel_shuffle, or_maxpool
+    from repro.core.quantize import ACT_Q
+    from repro.kernels.imc_mav import ops as mav_ops
+
+    h = x[..., None]
+    for i in range(cfg.num_conv_layers):
+        name = f"conv{i}"
+        if i == 0:
+            counts = imc.binary_group_conv_counts(h, hw.w_bin[name],
+                                                  groups=1,
+                                                  stride=cfg.strides[i])
+            h = imc.mav_sa(counts, hw.bias[name], hw.flip[name])
+        else:
+            h = mav_ops.conv_mav(h, hw.w_bin[name], hw.bias[name],
+                                 hw.flip[name], groups=cfg.groups(i),
+                                 stride=cfg.strides[i])
+        h = channel_shuffle(h, cfg.groups(i))
+        if cfg.pools[i] > 1:
+            h = or_maxpool(h, cfg.pools[i], axis=1)
+    feats = ACT_Q.quantize(jnp.mean(h, axis=1))
+    return feats @ hw.fc_w + hw.fc_b
+
+
+def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
+                    iters: int = 3) -> dict:
+    """Per-layer and end-to-end hw_forward timings, fused grouped kernel vs
+    the seed per-group-loop path; emits BENCH_imc_fused.json so the perf
+    trajectory is machine-readable from this PR on."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imc
+    from repro.core.binary import channel_shuffle, or_maxpool
+    from repro.kernels import default_interpret
+    from repro.kernels.imc_mav import ops as mav_ops
+    from repro.models import kws as m
+
+    cfg = m.KWSConfig(sample_len=sample_len)
+    params = m.init_params(jax.random.PRNGKey(0), cfg)
+    state = m.init_state(cfg)
+    hw = m.fold_params(params, state, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, sample_len),
+                           minval=-1, maxval=1)
+
+    report = {
+        "backend": jax.default_backend(),
+        "interpret": bool(default_interpret()),
+        "sample_len": sample_len,
+        "batch": 1,
+        "per_layer": [],
+        "end_to_end": {},
+    }
+
+    # per-layer: walk the net, timing each IMC layer both ways on its real
+    # input shape (baseline = conv_mav group loop + jnp shuffle/pool)
+    h = x[..., None]
+    for i in range(cfg.num_conv_layers):
+        name = f"conv{i}"
+        g, pool = cfg.groups(i), cfg.pools[i]
+        if i == 0:
+            counts = imc.binary_group_conv_counts(h, hw.w_bin[name],
+                                                  groups=1,
+                                                  stride=cfg.strides[i])
+            h = imc.mav_sa(counts, hw.bias[name], hw.flip[name])
+            h = channel_shuffle(h, g)
+            if pool > 1:
+                h = or_maxpool(h, pool, axis=1)
+            continue
+
+        def baseline(h=h, name=name, g=g, pool=pool, i=i):
+            o = mav_ops.conv_mav(h, hw.w_bin[name], hw.bias[name],
+                                 hw.flip[name], groups=g,
+                                 stride=cfg.strides[i])
+            o = channel_shuffle(o, g)
+            return or_maxpool(o, pool, axis=1) if pool > 1 else o
+
+        def fused(h=h, name=name, g=g, pool=pool, i=i):
+            return mav_ops.fused_conv_mav(h, hw.w_bin[name], hw.bias[name],
+                                          hw.flip[name], groups=g,
+                                          stride=cfg.strides[i], pool=pool)
+
+        us_base = _time_us(baseline, iters=iters)
+        us_fused = _time_us(fused, iters=iters)
+        cog = cfg.channels[i] // g
+        layout = imc.make_group_pack_layout(g, cog, cfg.kernels[i],
+                                            cfg.channels_per_group)
+        report["per_layer"].append({
+            "name": name, "groups": g, "cog": cog,
+            "packs": layout.packs, "groups_per_block": layout.gpb,
+            "grouploop_us": round(us_base, 1),
+            "fused_us": round(us_fused, 1),
+            "speedup": round(us_base / us_fused, 3),
+        })
+        _row(f"imc_fused_{name}", f"{us_fused:.0f}",
+             f"grouploop_us={us_base:.0f};x{us_base / us_fused:.2f}")
+        h = fused()
+
+    us_loop = _time_us(lambda: _grouploop_hw_forward(hw, x, cfg),
+                       iters=iters)
+    us_fused = _time_us(
+        lambda: m.hw_forward(hw, x, cfg, use_kernel=True)[0], iters=iters)
+    us_jnp = _time_us(
+        lambda: m.hw_forward(hw, x, cfg, use_kernel=False)[0], iters=iters)
+    report["end_to_end"] = {
+        "grouploop_us": round(us_loop, 1),
+        "fused_us": round(us_fused, 1),
+        "jnp_us": round(us_jnp, 1),
+        "speedup_vs_grouploop": round(us_loop / us_fused, 3),
+        "decisions_per_sec_fused": round(1e6 / us_fused, 2),
+        "decisions_per_sec_grouploop": round(1e6 / us_loop, 2),
+    }
+    _row("imc_fused_hw_forward", f"{us_fused:.0f}",
+         f"grouploop_us={us_loop:.0f};jnp_us={us_jnp:.0f};"
+         f"decisions_per_s={1e6 / us_fused:.2f}")
+
+    if out_path is None:
+        out_path = os.path.normpath(os.path.join(RESULTS,
+                                                 "BENCH_imc_fused.json"))
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    _row("imc_fused_json", "", out_path)
+    return report
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--imc-fused", action="store_true",
+                    help="run only the fused IMC layer benchmark and emit "
+                         "BENCH_imc_fused.json")
+    ap.add_argument("--imc-fused-out", default=None, metavar="PATH",
+                    help="output path for BENCH_imc_fused.json "
+                         "(default: results/BENCH_imc_fused.json)")
+    ap.add_argument("--sample-len", type=int, default=None,
+                    help="audio samples per decision for --imc-fused "
+                         "(default 16000)")
+    args = ap.parse_args(argv)
+    if not args.imc_fused and (args.imc_fused_out is not None
+                               or args.sample_len is not None):
+        ap.error("--imc-fused-out/--sample-len only apply with --imc-fused")
     print("name,us_per_call,derived")
+    if args.imc_fused:
+        imc_fused_bench(args.imc_fused_out,
+                        sample_len=args.sample_len or 16_000)
+        return
     table2_model()
     table3_hw_constraints()
     table4_customization()

@@ -190,6 +190,116 @@ def binary_group_conv_counts(x_bin: jax.Array, w_bin: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Group-pack layout for the fused IMC layer kernel
+# ---------------------------------------------------------------------------
+#
+# One IMC layer is `groups` independent small matmuls (fan-in k*cpg = 72,
+# 24-96 output channels each).  Launching one MXU matmul per group pads every
+# group's outputs to 128 lanes (~5x wasted columns for cog=24-48).  Instead we
+# pack `gpb = lanes // cog` groups into one grid step: their patches are
+# concatenated along the contraction axis and their weights placed on the
+# diagonal of a (gpb*kg, gpb*cog) block-diagonal matrix, so one 128-lane MXU
+# pass computes gpb groups at once (off-diagonal zeros contribute nothing,
+# exactly like unused word lines).  The kernel grid is then
+# (packs = ceil(groups/gpb), M-tiles).
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPackLayout:
+    """Static geometry of one packed grouped layer.
+
+    groups/cog: conv groups and output channels per group;
+    kg: per-group fan-in (k * c_in_per_group);
+    gpb: groups packed per grid step (share one 128-lane MXU pass);
+    packs: grid extent over packed group blocks;
+    lanes: MXU lane width the pack is sized against.
+    """
+
+    groups: int
+    cog: int
+    kg: int
+    gpb: int
+    packs: int
+    lanes: int = 128
+
+    @property
+    def g_pad(self) -> int:
+        """Groups padded up to a whole number of packs."""
+        return self.packs * self.gpb
+
+    @property
+    def k_pack(self) -> int:
+        """Contraction extent of one pack (gpb groups' fan-ins stacked)."""
+        return self.gpb * self.kg
+
+    @property
+    def n_pack(self) -> int:
+        """Output lanes of one pack (gpb groups' channels side by side)."""
+        return self.gpb * self.cog
+
+
+def make_group_pack_layout(groups: int, cog: int, k: int, cpg: int,
+                           lanes: int = 128) -> GroupPackLayout:
+    kg = k * cpg
+    gpb = max(1, min(groups, lanes // cog)) if cog <= lanes else 1
+    packs = -(-groups // gpb)
+    return GroupPackLayout(groups=groups, cog=cog, kg=kg, gpb=gpb,
+                           packs=packs, lanes=lanes)
+
+
+def pack_grouped_weights(w: jax.Array, layout: GroupPackLayout) -> jax.Array:
+    """(k, cpg, c_out) grouped weights -> (packs, k_pack, n_pack) block-diag.
+
+    Pack p, slot j holds group g = p*gpb + j at diagonal block
+    [j*kg:(j+1)*kg, j*cog:(j+1)*cog]; groups beyond `groups` are zero.
+    """
+    k, cpg, c_out = w.shape
+    lt = layout
+    wall = w.reshape(lt.kg, c_out)
+    wall = jnp.pad(wall, ((0, 0), (0, lt.g_pad * lt.cog - c_out)))
+    wg = wall.reshape(lt.kg, lt.g_pad, lt.cog).transpose(1, 0, 2)
+    wg = wg.reshape(lt.packs, lt.gpb, lt.kg, lt.cog)
+    bd = jnp.zeros((lt.packs, lt.gpb, lt.kg, lt.gpb, lt.cog), w.dtype)
+    for j in range(lt.gpb):
+        bd = bd.at[:, j, :, j, :].set(wg[:, j])
+    return bd.reshape(lt.packs, lt.k_pack, lt.n_pack)
+
+
+def pack_channel_param(v: jax.Array, layout: GroupPackLayout,
+                       fill: float = 0.0) -> jax.Array:
+    """Per-output-channel vector (c_out,) -> (packs, n_pack).
+
+    Channels are group-contiguous pre-shuffle, so a pack's n_pack channels
+    are one contiguous span; padded groups get `fill` (0 for bias/offset,
+    1 for flip)."""
+    lt = layout
+    v = jnp.pad(v, (0, lt.g_pad * lt.cog - v.shape[0]), constant_values=fill)
+    return v.reshape(lt.packs, lt.n_pack)
+
+
+def pack_grouped_patches(x: jax.Array, layout: GroupPackLayout, k: int,
+                         stride: int, t_use: int | None = None) -> jax.Array:
+    """im2col per group, packed: (B, T, C_in) -> (packs, B*t_use, k_pack).
+
+    Column layout within a pack matches pack_grouped_weights: slot j's fan-in
+    is flattened (tap-major, channel-minor) at offset j*kg.  ``t_use`` limits
+    the window positions (the caller truncates to a whole number of pool
+    windows so OR-pooling can fuse into the kernel)."""
+    b, t, c_in = x.shape
+    lt = layout
+    cpg = lt.kg // k
+    t_out = (t - k) // stride + 1
+    if t_use is None:
+        t_use = t_out
+    idx = jnp.arange(t_use)[:, None] * stride + jnp.arange(k)[None, :]
+    win = x[:, idx, :]                                  # (B, t_use, k, C_in)
+    win = jnp.pad(win, ((0, 0), (0, 0), (0, 0), (0, lt.g_pad * cpg - c_in)))
+    win = win.reshape(b, t_use, k, lt.g_pad, cpg).transpose(0, 1, 3, 2, 4)
+    win = win.reshape(b * t_use, lt.packs, lt.k_pack)
+    return win.transpose(1, 0, 2)
+
+
+# ---------------------------------------------------------------------------
 # Macro allocation / utilization accounting (paper Fig 8, §V-A)
 # ---------------------------------------------------------------------------
 

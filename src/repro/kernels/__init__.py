@@ -6,5 +6,19 @@
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd public
 wrapper), ref.py (pure-jnp oracle).  Validated in interpret mode on CPU;
-BlockSpecs are MXU/VMEM-aligned for the TPU target.
+BlockSpecs are MXU/VMEM-aligned for the TPU target.  Wrappers take
+``interpret=None`` and resolve it via ``default_interpret()`` — compiled on
+TPU, interpreter elsewhere.
 """
+
+from __future__ import annotations
+
+import functools
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """Pallas interpret mode is only needed off-TPU: compile on a TPU
+    backend, interpret (CPU/GPU correctness mode) otherwise."""
+    import jax
+    return jax.default_backend() != "tpu"

@@ -13,6 +13,29 @@ bank physically; padded to 128 here for MXU lane alignment — zero padding
 contributes 0 to the count, exactly like unused word lines).  The W tile is
 grid-invariant along M so weights stay VMEM-resident across the batch grid,
 the TPU analogue of weight-stationary in-SRAM storage.
+
+Two kernels live here:
+
+* ``imc_mav`` — the original single-matmul tile kernel (one launch per group;
+  kept as the per-group reference path and for generic ±1 matmuls);
+* ``imc_fused`` — the whole-IMC-layer kernel used by the model's hardware
+  path.  Grid/packing layout (see ``repro.core.imc.GroupPackLayout``):
+
+    grid = (packs, M-tiles), packs = ceil(groups / gpb), gpb = 128 // cog
+
+  Each grid step multiplies one pack of ``gpb`` groups at once: their im2col
+  patches are concatenated along the contraction axis (k_pack = gpb*kg) and
+  their weights sit on the diagonal of a (k_pack, n_pack) block-diagonal
+  matrix, so small per-group channel counts (24-96) share the 128 MXU lanes
+  instead of each padding to 128.  The epilogue fuses the entire digital
+  block after the macro — static chip offset, integer word-line bias, SA
+  noise, BN-decoder flip, SA sign, OR-maxpool over ``pool`` adjacent window
+  positions — and the channel shuffle is realized as the *output index map*:
+  the output array is (M/pool, cog, groups) with pack p writing lane-slab
+  [..., p*gpb:(p+1)*gpb], which flattens to the shuffled channel order
+  a*groups + g with no separate shuffle pass.  ±1 activations therefore go
+  conv -> pool without any pre-activation ever touching HBM, mirroring how
+  the macro never digitizes the analog MAV value.
 """
 
 from __future__ import annotations
@@ -73,3 +96,84 @@ def imc_mav(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         interpret=interpret,
     )(x, w, bias, flip, noise)
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer fused kernel (grouped conv + epilogue + shuffle + OR-pool)
+# ---------------------------------------------------------------------------
+
+
+def _epilogue(counts, off, bias, flip, noise, o_ref, *, gpb, cog, pool):
+    """Shared fused epilogue: ((counts + off) + bias [+ noise]) * flip ->
+    sign -> OR-maxpool over `pool` adjacent rows -> (rows/pool, cog, gpb).
+
+    The float-add order matches core.imc.mav_sa exactly (counts + chip
+    offset, then bias, then SA noise, then the BN-decoder flip) so the fused
+    path is bit-identical to the jnp oracle, noise included."""
+    pre = (counts + off[None, :]) + bias[None, :]
+    if noise is not None:
+        pre = pre + noise
+    pre = pre * flip[None, :]
+    act = jnp.where(pre >= 0, 1.0, -1.0)
+    act = act[:, :gpb * cog].reshape(-1, pool, gpb, cog)
+    act = jnp.max(act, axis=1)                       # OR-pool on ±1 == max
+    o_ref[...] = jnp.transpose(act, (0, 2, 1)).astype(o_ref.dtype)
+
+
+def _fused_kernel(x_ref, w_ref, off_ref, b_ref, f_ref, o_ref, *,
+                  gpb, cog, pool):
+    counts = jnp.dot(x_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    _epilogue(counts, off_ref[...], b_ref[...], f_ref[...], None, o_ref,
+              gpb=gpb, cog=cog, pool=pool)
+
+
+def _fused_kernel_noise(x_ref, w_ref, off_ref, b_ref, f_ref, n_ref, o_ref, *,
+                        gpb, cog, pool):
+    counts = jnp.dot(x_ref[...], w_ref[...],
+                     preferred_element_type=jnp.float32)
+    _epilogue(counts, off_ref[...], b_ref[...], f_ref[...], n_ref[...],
+              o_ref, gpb=gpb, cog=cog, pool=pool)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gpb", "cog", "pool", "bm", "interpret"))
+def imc_fused(xp: jax.Array, wp: jax.Array, off: jax.Array, bias: jax.Array,
+              flip: jax.Array, noise: jax.Array | None = None, *,
+              gpb: int, cog: int, pool: int = 1, bm: int = 256,
+              interpret: bool = True) -> jax.Array:
+    """One ``pallas_call`` for a whole grouped IMC layer.
+
+    xp:   (packs, M, k_pad)  packed ±1 im2col patches (zero K-padding);
+    wp:   (packs, k_pad, n_pad) block-diagonal ±1 weights;
+    off/bias/flip: (packs, n_pad) per-channel chip offset / word-line bias /
+          BN-decoder sign;
+    noise: (packs, M, n_pad) optional SA-noise realization.
+
+    M must be a multiple of ``bm`` and ``bm`` a multiple of ``pool`` (the
+    caller pads on pool-window boundaries, so padded rows never share an
+    OR-pool window with real rows).  Returns (M // pool, cog, packs*gpb):
+    flattening the last two axes is exactly the post-shuffle channel order.
+    """
+    packs, m, k_pad = xp.shape
+    n_pad = wp.shape[-1]
+    grid = (packs, m // bm)
+    x_spec = pl.BlockSpec((None, bm, k_pad), lambda p, i: (p, i, 0))
+    w_spec = pl.BlockSpec((None, k_pad, n_pad), lambda p, i: (p, 0, 0))
+    c_spec = pl.BlockSpec((None, n_pad), lambda p, i: (p, 0))
+    o_spec = pl.BlockSpec((bm // pool, cog, gpb), lambda p, i: (i, 0, p))
+    out_shape = jax.ShapeDtypeStruct((m // pool, cog, packs * gpb), xp.dtype)
+    if noise is None:
+        return pl.pallas_call(
+            functools.partial(_fused_kernel, gpb=gpb, cog=cog, pool=pool),
+            grid=grid,
+            in_specs=[x_spec, w_spec, c_spec, c_spec, c_spec],
+            out_specs=o_spec, out_shape=out_shape, interpret=interpret,
+        )(xp, wp, off, bias, flip)
+    n_spec = pl.BlockSpec((None, bm, n_pad), lambda p, i: (p, i, 0))
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_noise, gpb=gpb, cog=cog, pool=pool),
+        grid=grid,
+        in_specs=[x_spec, w_spec, c_spec, c_spec, c_spec, n_spec],
+        out_specs=o_spec, out_shape=out_shape, interpret=interpret,
+    )(xp, wp, off, bias, flip, noise)

@@ -1,6 +1,13 @@
-"""jit'd public wrappers around the imc_mav Pallas kernel: padding to tile
+"""jit'd public wrappers around the imc_mav Pallas kernels: padding to tile
 boundaries, im2col for the binary group conv, and the (B, T, C) activation
-interface used by repro.models.kws."""
+interface used by repro.models.kws.
+
+``fused_conv_mav`` is the inference hot path: the whole IMC layer (grouped
+binary conv + in-memory BN + SA + channel shuffle + OR-maxpool) in exactly
+one ``pallas_call`` with the group dimension in the kernel grid.  The
+per-group ``conv_mav`` loop below it is kept as the seed baseline the fused
+kernel is benchmarked against (see benchmarks/run.py::imc_fused_bench).
+"""
 
 from __future__ import annotations
 
@@ -9,22 +16,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.imc_mav.imc_mav import imc_mav
+from repro.core import imc
+from repro.kernels import default_interpret
+from repro.kernels.imc_mav.imc_mav import imc_fused, imc_mav
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int):
+def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0):
     pad = (-x.shape[axis]) % mult
     if pad == 0:
         return x, 0
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths), pad
+    return jnp.pad(x, widths, constant_values=value), pad
 
 
 def mav_matmul(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
-               noise: jax.Array | None = None, interpret: bool = True
+               noise: jax.Array | None = None, interpret: bool | None = None
                ) -> jax.Array:
     """Tile-padded entry: x (M,K) ±1, w (K,N) ±1 -> (M,N) ±1."""
+    if interpret is None:
+        interpret = default_interpret()
     m0, n0 = x.shape[0], w.shape[1]
     bm, bn = 256, 128
     x, _ = _pad_to(x, 0, bm)
@@ -41,27 +52,6 @@ def mav_matmul(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
     return out[:m0, :n0]
 
 
-def mav_sa_apply(counts: jax.Array, bias: jax.Array, flip: jax.Array,
-                 sa_key: jax.Array | None, sa_noise_std: float,
-                 interpret: bool = True) -> jax.Array:
-    """Epilogue-only path used when counts are already computed (the model's
-    conv produces counts; the kernel fuses bias+noise+SA)."""
-    b, t, c = counts.shape
-    x = counts.reshape(b * t, c)
-    noise = None
-    if sa_key is not None and sa_noise_std > 0:
-        noise = sa_noise_std * jax.random.normal(sa_key, x.shape)
-    # identity "matmul": route counts through the epilogue with W=I is
-    # wasteful — use the epilogue math directly in jnp instead; the full
-    # kernel path is exercised via conv_mav below.
-    pre = x + bias[None, :]
-    if noise is not None:
-        pre = pre + noise
-    pre = pre * flip[None, :]
-    out = jnp.where(pre >= 0, 1.0, -1.0).astype(counts.dtype)
-    return out.reshape(b, t, c)
-
-
 def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
     """x (B, T, C) -> patches (B, T_out, k*C)."""
     b, t, c = x.shape
@@ -74,9 +64,10 @@ def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
 def conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
              groups: int, stride: int = 1,
              sa_key: jax.Array | None = None, sa_noise_std: float = 0.0,
-             interpret: bool = True) -> jax.Array:
-    """Full IMC layer through the Pallas kernel: binary group conv (as an
-    im2col matmul per group) + in-memory BN + SA.
+             interpret: bool | None = None) -> jax.Array:
+    """Seed per-group-loop path: one tiny ``pallas_call`` per conv group,
+    each padding its output channels to 128 lanes.  Superseded by
+    ``fused_conv_mav`` on the hot path; kept as the benchmark baseline.
 
     x: (B, T, C_in) ±1;  w: (K, C_in//groups, C_out) ±1.
     """
@@ -101,3 +92,86 @@ def conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
                         interpret=interpret)
         outs.append(og.reshape(b, t_out, cog))
     return jnp.concatenate(outs, axis=-1)
+
+
+def fused_conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array,
+                   flip: jax.Array, groups: int, stride: int = 1,
+                   pool: int = 1,
+                   chip_offset: jax.Array | None = None,
+                   sa_key: jax.Array | None = None,
+                   sa_noise_std: float = 0.0,
+                   interpret: bool | None = None) -> jax.Array:
+    """The whole IMC layer in one ``pallas_call``: grouped binary conv +
+    static chip offset + in-memory BN bias + SA noise + BN-decoder flip +
+    SA sign + channel shuffle + OR-maxpool.
+
+    x: (B, T, C_in) ±1;  w: (K, C_in//groups, C_out) ±1;
+    bias/flip/chip_offset: (C_out,).  Returns (B, T_pool, C_out) ±1 in the
+    *post-shuffle* channel order — the shuffle is the kernel's output index
+    map (see imc_mav.py), not a separate pass.
+
+    Bit-identical (noise path included: the SA noise realization is drawn
+    with the same key/shape as ``core.imc.mav_sa``) to
+
+        counts = imc.binary_group_conv_counts(x, w, groups, stride)
+        h = imc.mav_sa(counts + chip_offset, bias, flip, sa_key=...,
+                       sa_noise_std=...)
+        h = or_maxpool(channel_shuffle(h, groups), pool, axis=1)
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, t, c_in = x.shape
+    k, cpg, c_out = w.shape
+    cog = c_out // groups
+    t_out = (t - k) // stride + 1
+    t_pool = t_out // pool
+    t_use = t_pool * pool
+    if t_use <= 0:
+        raise ValueError(
+            f"fused_conv_mav: input T={t} yields no complete pool window "
+            f"(k={k}, stride={stride}, pool={pool}) — input too short for "
+            f"this layer")
+    layout = imc.make_group_pack_layout(groups, cog, k, cpg)
+
+    xp = imc.pack_grouped_patches(x, layout, k, stride, t_use)
+    wp = imc.pack_grouped_weights(w, layout)
+    off = (jnp.zeros((c_out,), jnp.float32) if chip_offset is None
+           else chip_offset.astype(jnp.float32))
+    offp = imc.pack_channel_param(off, layout)
+    bp = imc.pack_channel_param(bias, layout)
+    fp = imc.pack_channel_param(flip, layout, fill=1.0)
+
+    noisep = None
+    if sa_key is not None and sa_noise_std > 0:
+        # Same draw as the jnp path (imc.mav_sa over (B, t_out, C_out)) so
+        # the fused layer is bit-identical noise included.
+        noise = sa_noise_std * jax.random.normal(sa_key, (b, t_out, c_out))
+        noise = noise[:, :t_use].reshape(b * t_use, c_out)
+        noise = jnp.pad(noise, ((0, 0), (0, layout.g_pad * cog - c_out)))
+        noisep = noise.reshape(b * t_use, layout.packs,
+                               layout.n_pack).transpose(1, 0, 2)
+
+    # M-tile: multiple of the pool window (windows never straddle a tile or
+    # the zero padding — M0 = B*t_use is already a whole number of windows).
+    m0 = b * t_use
+    bm_out = -(-min(256, -(-m0 // pool)) // 8) * 8
+    bm = bm_out * pool
+    xp, _ = _pad_to(xp, 1, bm)
+    k_pad = (-(-layout.k_pack // 128)) * 128          # MXU lane alignment
+    n_pad = (-(-layout.n_pack // 128)) * 128
+    xp, _ = _pad_to(xp, 2, k_pad)
+    wp, _ = _pad_to(wp, 1, k_pad)
+    wp, _ = _pad_to(wp, 2, n_pad)
+    offp, _ = _pad_to(offp, 1, n_pad)
+    bp, _ = _pad_to(bp, 1, n_pad)
+    fp, _ = _pad_to(fp, 1, n_pad, value=1.0)
+    if noisep is not None:
+        noisep, _ = _pad_to(noisep, 1, bm)
+        noisep, _ = _pad_to(noisep, 2, n_pad)
+
+    out = imc_fused(xp, wp, offp, bp, fp, noisep, gpb=layout.gpb, cog=cog,
+                    pool=pool, bm=bm, interpret=interpret)
+    # (M_pad/pool, cog, g_pad): crop pad rows/groups; flattening (cog,
+    # groups) is exactly channel_shuffle's a*groups + g order.
+    out = out[:b * t_pool, :, :groups]
+    return out.reshape(b, t_pool, c_out)

@@ -14,3 +14,24 @@ def imc_mav_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
         pre = pre + noise
     pre = pre * flip[None, :]
     return jnp.where(pre >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def fused_conv_mav_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+                       flip: jax.Array, groups: int, stride: int = 1,
+                       pool: int = 1, chip_offset: jax.Array | None = None,
+                       sa_key: jax.Array | None = None,
+                       sa_noise_std: float = 0.0) -> jax.Array:
+    """Oracle for ops.fused_conv_mav: the whole IMC layer via the model's
+    count-exact primitives (conv counts -> mav_sa -> shuffle -> OR-pool)."""
+    from repro.core import imc
+    from repro.core.binary import channel_shuffle, or_maxpool
+
+    counts = imc.binary_group_conv_counts(x, w, groups=groups, stride=stride)
+    if chip_offset is not None:
+        counts = counts + chip_offset
+    h = imc.mav_sa(counts, bias, flip, sa_key=sa_key,
+                   sa_noise_std=sa_noise_std)
+    h = channel_shuffle(h, groups)
+    if pool > 1:
+        h = or_maxpool(h, pool, axis=1)
+    return h

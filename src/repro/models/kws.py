@@ -19,8 +19,9 @@ into the bias at fold time).  Three forwards are provided:
   * ``forward_eval``:  float path with frozen (running) BN stats;
   * ``hw_forward``:    the bit/count-exact hardware path over folded params,
     with BN parity/range constraints, MAV offset + SA variation — the model
-    of the silicon.  Can optionally route the IMC layers through the Pallas
-    ``imc_mav`` kernel (use_kernel=True).
+    of the silicon.  With use_kernel=True each IMC layer runs as one fused
+    grouped Pallas ``imc_fused`` kernel (conv + epilogue + shuffle + pool,
+    no HBM round trip — see repro.kernels.imc_mav).
 """
 
 from __future__ import annotations
@@ -369,28 +370,41 @@ def hw_forward(hw: HWParams, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
 
     Returns (logits, features) and, with collect_counts, the per-layer pre-SA
     counts (the chip's test mode, used for bias-compensation calibration).
+
+    With ``use_kernel=True`` every IMC layer (conv1..conv5) runs as exactly
+    one fused ``pallas_call`` — grouped conv + chip offset + word-line bias +
+    SA noise + flip + sign + channel shuffle + OR-maxpool, no pre-activation
+    HBM round trip — bit-identical to the jnp path (noise included: both
+    draw the SA realization from the same per-layer key).  ``collect_counts``
+    (the chip's digitize-the-counts test mode) forces the unfused path, since
+    the fused kernel never materializes counts — exactly like the silicon.
     """
     counts_log: Dict[str, jax.Array] = {}
+    use_fused = use_kernel and not collect_counts
     h = x[..., None]
     for i in range(cfg.num_conv_layers):
         name = f"conv{i}"
+        key = None
+        if rng is not None and sa_noise_std > 0.0 and i > 0:
+            rng, key = jax.random.split(rng)
+        if use_fused and i > 0:
+            from repro.kernels.imc_mav import ops as mav_ops
+            off = None if chip_offsets is None else chip_offsets[name]
+            h = mav_ops.fused_conv_mav(
+                h, hw.w_bin[name], hw.bias[name], hw.flip[name],
+                groups=cfg.groups(i), stride=cfg.strides[i],
+                pool=cfg.pools[i], chip_offset=off, sa_key=key,
+                sa_noise_std=sa_noise_std)
+            continue
         counts = _conv_counts(h, hw.w_bin[name], cfg.strides[i],
                               cfg.groups(i))
         if chip_offsets is not None and i > 0:
             counts = counts + chip_offsets[name]
         if collect_counts:
             counts_log[name] = counts
-        key = None
-        if rng is not None and sa_noise_std > 0.0 and i > 0:
-            rng, key = jax.random.split(rng)
-        if use_kernel and i > 0:
-            from repro.kernels.imc_mav import ops as mav_ops
-            h = mav_ops.mav_sa_apply(counts, hw.bias[name], hw.flip[name],
-                                     key, sa_noise_std)
-        else:
-            h = imc.mav_sa(counts, hw.bias[name], hw.flip[name],
-                           mav_offset=None, sa_key=key,
-                           sa_noise_std=sa_noise_std if i > 0 else 0.0)
+        h = imc.mav_sa(counts, hw.bias[name], hw.flip[name],
+                       mav_offset=None, sa_key=key,
+                       sa_noise_std=sa_noise_std if i > 0 else 0.0)
         h = channel_shuffle(h, cfg.groups(i))          # Fig 9 digital block
         if cfg.pools[i] > 1:
             h = or_maxpool(h, cfg.pools[i], axis=1)

@@ -1,0 +1,85 @@
+"""Tiny fallback for the optional ``hypothesis`` dependency.
+
+The property tests only use ``given``/``settings`` with three strategies
+(floats, integers, lists-of-floats).  When hypothesis is installed we
+re-export the real thing; otherwise this shim runs each property over a
+deterministic pseudo-random sample (seeded, endpoints first) so the suite
+still collects and exercises the properties without the dependency.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import struct
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng, i):
+            return self._draw(rng, i)
+
+    def _f32(v: float) -> float:
+        return struct.unpack("f", struct.pack("f", v))[0]
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=True, width=64):
+            def draw(rng, i):
+                # endpoints and zero first, then uniform samples
+                if i == 0:
+                    v = float(min_value)
+                elif i == 1:
+                    v = float(max_value)
+                elif i == 2 and min_value <= 0.0 <= max_value:
+                    v = 0.0
+                else:
+                    v = rng.uniform(min_value, max_value)
+                return _f32(v) if width == 32 else v
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value, max_value):
+            def draw(rng, i):
+                if i == 0:
+                    return int(min_value)
+                if i == 1:
+                    return int(max_value)
+                return rng.randint(min_value, max_value)
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng, i):
+                size = min_size if i == 0 else rng.randint(min_size, max_size)
+                return [elements.draw(rng, 3 + j) for j in range(size)]
+            return _Strategy(draw)
+
+    def given(*strats):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_shim_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for i in range(n):
+                    fn(*[s.draw(rng, i) for s in strats])
+            # NOT functools.wraps: the wrapper must expose a zero-arg
+            # signature or pytest would look for fixtures named after the
+            # property's parameters.
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco

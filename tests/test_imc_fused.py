@@ -1,0 +1,151 @@
+"""Bit-exact validation of the fused grouped IMC layer kernel
+(repro.kernels.imc_mav.imc_fused / ops.fused_conv_mav) against the
+binary_group_conv_counts + mav_sa + channel_shuffle + or_maxpool oracle,
+across all five paper IMC layer shapes, plus the hw_forward wiring
+(one pallas_call per layer, bit-identical to the jnp path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.core import imc
+from repro.kernels.imc_mav import ops as mav_ops
+from repro.kernels.imc_mav.ref import fused_conv_mav_ref as _oracle_ref
+from repro.models import kws as m
+
+# (c_in, c_out, groups, stride, pool) for the paper's IMC layers L2..L6
+# (conv1..conv5 of KWSConfig: cpg=24, k=3)
+PAPER_IMC_LAYERS = [
+    pytest.param(24, 96, 1, 1, 2, id="L2-24to96-g1-pool2"),
+    pytest.param(96, 192, 4, 1, 2, id="L3-96to192-g4-pool2"),
+    pytest.param(192, 288, 8, 1, 1, id="L4-192to288-g8-nopool"),
+    pytest.param(288, 384, 12, 1, 2, id="L5-288to384-g12-pool2"),
+    pytest.param(384, 576, 16, 1, 2, id="L6-384to576-g16-pool2"),
+]
+
+
+def _pm1(key, shape):
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1.0, -1.0)
+
+
+def _oracle(x, w, bias, flip, groups, stride, pool, chip_offset=None,
+            sa_key=None, sa_noise_std=0.0):
+    return _oracle_ref(x, w, bias, flip, groups=groups, stride=stride,
+                       pool=pool, chip_offset=chip_offset, sa_key=sa_key,
+                       sa_noise_std=sa_noise_std)
+
+
+@pytest.mark.parametrize("c_in,c_out,groups,stride,pool", PAPER_IMC_LAYERS)
+@pytest.mark.parametrize("noisy", [False, True], ids=["clean", "noise"])
+def test_fused_conv_mav_bitexact_paper_layers(c_in, c_out, groups, stride,
+                                              pool, noisy):
+    key = jax.random.PRNGKey(c_out * 3 + groups)
+    x = _pm1(key, (2, 25, c_in))
+    w = _pm1(jax.random.fold_in(key, 1), (3, c_in // groups, c_out))
+    bias = jnp.round(
+        jax.random.normal(jax.random.fold_in(key, 2), (c_out,)) * 8) * 2
+    flip = _pm1(jax.random.fold_in(key, 3), (c_out,))
+    chip_off = 4.0 * jax.random.normal(jax.random.fold_in(key, 4), (c_out,))
+    sa_key = jax.random.fold_in(key, 5) if noisy else None
+    std = 1.5 if noisy else 0.0
+
+    got = mav_ops.fused_conv_mav(x, w, bias, flip, groups=groups,
+                                 stride=stride, pool=pool,
+                                 chip_offset=chip_off, sa_key=sa_key,
+                                 sa_noise_std=std)
+    want = _oracle(x, w, bias, flip, groups, stride, pool,
+                   chip_offset=chip_off, sa_key=sa_key, sa_noise_std=std)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if noisy:
+        clean = _oracle(x, w, bias, flip, groups, stride, pool,
+                        chip_offset=chip_off)
+        assert np.mean(np.asarray(want) != np.asarray(clean)) > 0.001
+
+
+def test_fused_conv_mav_stride_and_odd_t():
+    """Stride > 1 and a T that leaves a pool remainder (truncated window)."""
+    key = jax.random.PRNGKey(7)
+    x = _pm1(key, (3, 29, 48))
+    w = _pm1(jax.random.fold_in(key, 1), (3, 24, 96))
+    bias = jnp.zeros((96,))
+    flip = jnp.ones((96,))
+    got = mav_ops.fused_conv_mav(x, w, bias, flip, groups=2, stride=2,
+                                 pool=2)
+    want = _oracle(x, w, bias, flip, groups=2, stride=2, pool=2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_group_pack_layout_paper_shapes():
+    """The packing actually shares MXU lanes: every multi-group paper layer
+    packs >= 2 groups per grid step and needs fewer grid steps than groups."""
+    for (_, c_out, groups, _, _) in [p.values for p in PAPER_IMC_LAYERS]:
+        cog = c_out // groups
+        lt = imc.make_group_pack_layout(groups, cog, 3, 24)
+        assert lt.packs * lt.gpb >= groups
+        assert lt.gpb * cog <= lt.lanes
+        if groups > 1:
+            assert lt.gpb >= 2
+            assert lt.packs < groups
+
+
+def test_hw_forward_fused_bitexact_incl_noise_and_offsets():
+    cfg = m.KWSConfig(sample_len=600)
+    p = m.init_params(jax.random.PRNGKey(5), cfg)
+    st = m.init_state(cfg)
+    x = jnp.round(jax.random.uniform(jax.random.PRNGKey(6),
+                                     (2, cfg.sample_len),
+                                     minval=-1, maxval=1) * 127) / 127
+    hw = m.fold_params(p, st, cfg)
+    _, f_a = m.hw_forward(hw, x, cfg, use_kernel=False)
+    _, f_b = m.hw_forward(hw, x, cfg, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(f_a), np.asarray(f_b))
+
+    chans = {f"conv{i}": cfg.channels[i]
+             for i in range(1, cfg.num_conv_layers)}
+    offs = imc.sample_chip_offsets(jax.random.PRNGKey(9), chans,
+                                   imc.IMCNoiseParams())
+    rng = jax.random.PRNGKey(11)
+    _, f_c = m.hw_forward(hw, x, cfg, chip_offsets=offs, sa_noise_std=1.0,
+                          rng=rng, use_kernel=False)
+    _, f_d = m.hw_forward(hw, x, cfg, chip_offsets=offs, sa_noise_std=1.0,
+                          rng=rng, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(f_c), np.asarray(f_d))
+
+
+def test_hw_forward_one_pallas_call_per_imc_layer(monkeypatch):
+    """use_kernel=True must trace exactly one pallas_call per IMC layer —
+    the group dimension lives in the kernel grid, not a Python loop."""
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    # unique sample_len => fresh shapes => every layer retraces under jit
+    cfg = m.KWSConfig(sample_len=616)
+    p = m.init_params(jax.random.PRNGKey(0), cfg)
+    st = m.init_state(cfg)
+    hw = m.fold_params(p, st, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, cfg.sample_len),
+                           minval=-1, maxval=1)
+    m.hw_forward(hw, x, cfg, use_kernel=True)
+    assert len(calls) == cfg.num_conv_layers - 1        # conv1..conv5 only
+
+
+def test_hw_forward_collect_counts_falls_back():
+    """The chip's count-digitizing test mode still works with use_kernel."""
+    cfg = m.KWSConfig(sample_len=600)
+    p = m.init_params(jax.random.PRNGKey(2), cfg)
+    st = m.init_state(cfg)
+    hw = m.fold_params(p, st, cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(3), (1, cfg.sample_len),
+                           minval=-1, maxval=1)
+    lg, feats, counts = m.hw_forward(hw, x, cfg, collect_counts=True,
+                                     use_kernel=True)
+    assert set(counts) == {f"conv{i}" for i in range(cfg.num_conv_layers)}
+    lg2, _ = m.hw_forward(hw, x, cfg, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(lg), np.asarray(lg2))

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.quantize import (ACCUM_Q, ACT_Q, ERROR_Q, GRAD_Q, WEIGHT_Q,
                                  QFormat, error_scale_exponent, scale_error)
