@@ -104,7 +104,9 @@ def run(fast: bool = False):
     hw_fcq = m.fold_params(params, state, CFG, bn_constraints=False,
                            fc_quant=True)
     acc_fcq = tr.evaluate_hw(hw_fcq, xte, yte, CFG)
-    hw = m.fold_params(params, state, CFG)          # + BN constraints
+    # the constrained fold is reused across every noisy evaluation below:
+    # fold (and pack the fused-kernel operands) exactly once
+    hw = m.fold_params(params, state, CFG, pack=True)   # + BN constraints
     acc_bn = tr.evaluate_hw(hw, xte, yte, CFG)
 
     n_seeds = 2 if fast else 5
@@ -158,8 +160,8 @@ def run(fast: bool = False):
     base_personal = tr.evaluate_hw(hw_comp_first, xp_te, yp_te, CFG,
                                    chip_offsets=chips[0],
                                    sa_noise_std=SA_STD)
-    w0 = np.asarray(hw_comp_first.fc_w)
-    b0 = np.asarray(hw_comp_first.fc_b)
+    w0 = np.asarray(hw_comp_first.hw.fc_w)
+    b0 = np.asarray(hw_comp_first.hw.fc_b)
 
     epochs = 400 if fast else 1000
     variants = {
@@ -195,9 +197,10 @@ def run(fast: bool = False):
         for i in range(CFG.num_conv_layers)}
 
     # ---- Fig 7: BN bias distribution ----
-    all_bias = np.concatenate([np.asarray(
-        m.fold_params(params, state, CFG, bn_constraints=False).bias[n])
-        for n in CFG.imc_layer_names()])
+    hw_unconstrained = m.fold_params(params, state, CFG,
+                                     bn_constraints=False)  # fold once,
+    all_bias = np.concatenate([np.asarray(hw_unconstrained.bias[n])
+                               for n in CFG.imc_layer_names()])
     results["fig7"] = {
         "bias_mean": float(all_bias.mean()), "bias_std": float(all_bias.std()),
         "fraction_in_range": float(np.mean(np.abs(all_bias) <= 64)),

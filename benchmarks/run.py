@@ -9,9 +9,13 @@ markers instead of silently re-running multi-minute jobs.
 
 Run:  PYTHONPATH=src python -m benchmarks.run
       PYTHONPATH=src python -m benchmarks.run --imc-fused
-          (fused-vs-group-loop IMC layer benchmark; writes the per-layer and
-           end-to-end hw_forward decisions/sec record to
-           results/BENCH_imc_fused.json)
+          (fused-vs-group-loop IMC layer benchmark, batch sweep {1,4,16};
+           writes the per-layer and end-to-end hw_forward decisions/sec
+           record to results/BENCH_imc_fused.json)
+      PYTHONPATH=src python -m benchmarks.run --streaming
+          (always-on serving: frame-incremental streaming vs full-window
+           recompute, >=4 batched streams; writes decisions/sec, MACs and
+           uJ/decision to results/BENCH_streaming.json)
 """
 
 from __future__ import annotations
@@ -223,10 +227,15 @@ def _grouploop_hw_forward(hw, x, cfg):
 
 
 def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
-                    iters: int = 3) -> dict:
+                    iters: int = 3,
+                    batches: tuple = (1, 4, 16)) -> dict:
     """Per-layer and end-to-end hw_forward timings, fused grouped kernel vs
     the seed per-group-loop path; emits BENCH_imc_fused.json so the perf
-    trajectory is machine-readable from this PR on."""
+    trajectory is machine-readable from this PR on.
+
+    The end-to-end section sweeps ``batches`` so the fused kernel's
+    M-tiling amortization (weights stay VMEM-resident across the batch
+    grid) is visible, not just batch=1."""
     import jax
     import jax.numpy as jnp
     from repro.core import imc
@@ -246,7 +255,7 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
         "backend": jax.default_backend(),
         "interpret": bool(default_interpret()),
         "sample_len": sample_len,
-        "batch": 1,
+        "batches": list(batches),
         "per_layer": [],
         "end_to_end": {},
     }
@@ -295,23 +304,30 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
              f"grouploop_us={us_base:.0f};x{us_base / us_fused:.2f}")
         h = fused()
 
-    us_loop = _time_us(lambda: _grouploop_hw_forward(hw, x, cfg),
-                       iters=iters)
-    us_fused = _time_us(
-        lambda: m.hw_forward(hw, x, cfg, use_kernel=True)[0], iters=iters)
-    us_jnp = _time_us(
-        lambda: m.hw_forward(hw, x, cfg, use_kernel=False)[0], iters=iters)
-    report["end_to_end"] = {
-        "grouploop_us": round(us_loop, 1),
-        "fused_us": round(us_fused, 1),
-        "jnp_us": round(us_jnp, 1),
-        "speedup_vs_grouploop": round(us_loop / us_fused, 3),
-        "decisions_per_sec_fused": round(1e6 / us_fused, 2),
-        "decisions_per_sec_grouploop": round(1e6 / us_loop, 2),
-    }
-    _row("imc_fused_hw_forward", f"{us_fused:.0f}",
-         f"grouploop_us={us_loop:.0f};jnp_us={us_jnp:.0f};"
-         f"decisions_per_s={1e6 / us_fused:.2f}")
+    hw_packed = m.pack_hw_params(hw, cfg)
+    for b in batches:
+        xb = jax.random.uniform(jax.random.PRNGKey(2), (b, sample_len),
+                                minval=-1, maxval=1)
+        us_loop = _time_us(lambda: _grouploop_hw_forward(hw, xb, cfg),
+                           iters=iters)
+        us_fused = _time_us(
+            lambda: m.hw_forward(hw_packed, xb, cfg, use_kernel=True)[0],
+            iters=iters)
+        us_jnp = _time_us(
+            lambda: m.hw_forward(hw, xb, cfg, use_kernel=False)[0],
+            iters=iters)
+        report["end_to_end"][f"batch_{b}"] = {
+            "batch": b,
+            "grouploop_us": round(us_loop, 1),
+            "fused_us": round(us_fused, 1),
+            "jnp_us": round(us_jnp, 1),
+            "speedup_vs_grouploop": round(us_loop / us_fused, 3),
+            "decisions_per_sec_fused": round(b * 1e6 / us_fused, 2),
+            "decisions_per_sec_grouploop": round(b * 1e6 / us_loop, 2),
+        }
+        _row(f"imc_fused_hw_forward_b{b}", f"{us_fused:.0f}",
+             f"grouploop_us={us_loop:.0f};jnp_us={us_jnp:.0f};"
+             f"decisions_per_s={b * 1e6 / us_fused:.2f}")
 
     if out_path is None:
         out_path = os.path.normpath(os.path.join(RESULTS,
@@ -325,6 +341,113 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
     return report
 
 
+# ---------------------------------------------------------------------------
+# Streaming serving: frame-incremental vs full-recompute decisions/sec
+# ---------------------------------------------------------------------------
+
+
+def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
+                    hop: int = 256, slots: int = 4, hops: int = 6,
+                    use_kernel: bool = True) -> dict:
+    """Always-on serving benchmark: ``slots`` concurrent streams batched
+    through the StreamServer, frame-incremental (streaming) vs full-window
+    recompute per hop.  Records decisions/sec, per-decision MAC counts and
+    the analytical uJ/decision for both paths into BENCH_streaming.json.
+
+    Timing protocol: both servers are stepped once past admission and once
+    past the jit trace, then ``hops`` steady-state batched hops are timed.
+    """
+    import jax
+    import numpy as np_
+    from repro.core import energy
+    from repro.kernels import default_interpret
+    from repro.models import kws as m
+    from repro.serving import StreamServer, streaming_layer_stats
+
+    cfg = m.KWSConfig(sample_len=sample_len)
+    params = m.init_params(jax.random.PRNGKey(0), cfg)
+    state = m.init_state(cfg)
+    hw = m.fold_params(params, state, cfg, pack=True)
+
+    rng = np_.random.default_rng(0)
+    total = sample_len + (hops + 2) * hop
+    streams = {f"s{i}": rng.uniform(-1, 1, size=total).astype(np_.float32)
+               for i in range(slots)}
+
+    def run(streaming: bool) -> dict:
+        srv = StreamServer(hw, cfg, hop=hop, slots=slots,
+                           use_kernel=use_kernel, streaming=streaming)
+        for sid, audio in streams.items():
+            srv.submit(sid, audio)
+            srv.finish(sid)
+        srv.step()                         # admissions (window 0)
+        srv.step()                         # first hop: jit trace, untimed
+        t0 = time.perf_counter()
+        n = 0
+        for _ in range(hops):
+            n += len(srv.step())
+        dt = time.perf_counter() - t0
+        assert n == slots * hops, (n, slots, hops)
+        return {
+            "decisions": n,
+            "wall_s": round(dt, 4),
+            "us_per_decision": round(dt / n * 1e6, 1),
+            "decisions_per_sec": round(n / dt, 2),
+        }
+
+    from repro.models.kws import layer_stats
+    from repro.serving import make_stream_geometry
+    geom = make_stream_geometry(cfg, hop)
+    stats_off = layer_stats(cfg)
+    stats_str = streaming_layer_stats(cfg, geom)
+    macs_off = sum(s["macs"] for s in stats_off)
+    macs_str = sum(s["macs"] for s in stats_str)
+
+    res_stream = run(streaming=True)
+    res_recomp = run(streaming=False)
+    speedup = (res_stream["decisions_per_sec"]
+               / res_recomp["decisions_per_sec"])
+    report = {
+        "backend": jax.default_backend(),
+        "interpret": bool(default_interpret()),
+        "use_kernel": use_kernel,
+        "window": sample_len,
+        "hop": hop,
+        "hop_over_window": round(hop / sample_len, 4),
+        "slots": slots,
+        "timed_hops": hops,
+        "streaming": res_stream,
+        "recompute": res_recomp,
+        "speedup_decisions_per_sec": round(speedup, 3),
+        "macs_per_decision": {
+            "offline": macs_off,
+            "streaming": macs_str,
+            "ratio": round(macs_str / macs_off, 4),
+        },
+        "energy": {
+            k: round(v, 4) if isinstance(v, float) else v
+            for k, v in energy.streaming_energy_summary(
+                stats_off, stats_str).items()
+        },
+    }
+    _row("streaming_decisions_per_sec",
+         f"{res_stream['us_per_decision']:.0f}",
+         f"recompute_us={res_recomp['us_per_decision']:.0f};"
+         f"x{speedup:.2f};slots={slots};hop/window={hop / sample_len:.3f}")
+    _row("streaming_macs_ratio", "", f"{macs_str / macs_off:.4f}")
+
+    if out_path is None:
+        out_path = os.path.normpath(os.path.join(RESULTS,
+                                                 "BENCH_streaming.json"))
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    _row("streaming_json", "", out_path)
+    return report
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -335,16 +458,49 @@ def main(argv=None) -> None:
                     help="output path for BENCH_imc_fused.json "
                          "(default: results/BENCH_imc_fused.json)")
     ap.add_argument("--sample-len", type=int, default=None,
-                    help="audio samples per decision for --imc-fused "
-                         "(default 16000)")
+                    help="audio samples per decision window "
+                         "(--imc-fused default 16000; --streaming 2000)")
+    ap.add_argument("--batches", default=None, metavar="B1,B2,...",
+                    help="batch sizes for the --imc-fused end-to-end sweep "
+                         "(default 1,4,16)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="run the always-on serving benchmark (streaming "
+                         "vs recompute) and emit BENCH_streaming.json")
+    ap.add_argument("--streaming-out", default=None, metavar="PATH",
+                    help="output path for BENCH_streaming.json")
+    ap.add_argument("--hop", type=int, default=256,
+                    help="--streaming hop size in samples (default 256)")
+    ap.add_argument("--stream-slots", type=int, default=4,
+                    help="--streaming concurrent streams (default 4)")
+    ap.add_argument("--stream-hops", type=int, default=6,
+                    help="--streaming timed hops per stream (default 6)")
     args = ap.parse_args(argv)
+    if args.imc_fused and args.streaming:
+        ap.error("--imc-fused and --streaming are separate runs; pick one")
     if not args.imc_fused and (args.imc_fused_out is not None
-                               or args.sample_len is not None):
-        ap.error("--imc-fused-out/--sample-len only apply with --imc-fused")
+                               or args.batches is not None):
+        ap.error("--imc-fused-out/--batches only apply with --imc-fused")
+    if not args.streaming and (args.streaming_out is not None
+                               or args.hop != 256 or args.stream_slots != 4
+                               or args.stream_hops != 6):
+        ap.error("--streaming-out/--hop/--stream-slots/--stream-hops only "
+                 "apply with --streaming")
+    if args.sample_len is not None and not (args.imc_fused
+                                            or args.streaming):
+        ap.error("--sample-len only applies with --imc-fused/--streaming")
     print("name,us_per_call,derived")
     if args.imc_fused:
+        batches = tuple(int(b) for b in
+                        (args.batches or "1,4,16").split(","))
         imc_fused_bench(args.imc_fused_out,
-                        sample_len=args.sample_len or 16_000)
+                        sample_len=args.sample_len or 16_000,
+                        batches=batches)
+        return
+    if args.streaming:
+        streaming_bench(args.streaming_out,
+                        sample_len=args.sample_len or 2_000,
+                        hop=args.hop, slots=args.stream_slots,
+                        hops=args.stream_hops)
         return
     table2_model()
     table3_hw_constraints()

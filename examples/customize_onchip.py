@@ -36,7 +36,9 @@ else:
     params, state = tr.train_base(
         xtr, ytr, cfg, tr.TrainConfig(epochs=24, batch_size=80, lr=3e-3))
 
-hw = m.fold_params(params, state, cfg)
+# fold ONCE (packed: the fused kernel's operands are precomputed here, not
+# per evaluation call) and reuse the same PackedHWParams everywhere below
+hw = m.fold_params(params, state, cfg, pack=True)
 (xp_tr, yp_tr), (xp_te, yp_te) = audio.make_personal(
     train_per_class=3, test_per_class=6, length=L, accent_shift=0.18)
 f_tr = tr.hw_features(hw, xp_tr, cfg)
@@ -52,7 +54,7 @@ for name, kw in {
 }.items():
     ocfg = OnChipTrainConfig(epochs=600, **kw)
     w, b = quantized_head_finetune(jnp.asarray(f_tr), jnp.asarray(yp_tr),
-                                   hw.fc_w, hw.fc_b, ocfg)
+                                   hw.hw.fc_w, hw.hw.fc_b, ocfg)
     acc = float(head_accuracy(jnp.asarray(f_te), jnp.asarray(yp_te), w, b,
                               ocfg))
     print(f"{name:18s}: {acc:.3f}")

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# CI gate: the tier-1 quick pass plus the streaming-equivalence contract.
+#
+#   scripts/ci.sh            quick: everything but slow/streaming-marked
+#                            tests, then the streaming bit-exactness tests
+#   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
+#
+# The `streaming` marker (pytest.ini) tags the serving equivalence tests
+# and the long multi-stream soak: the quick pass deselects them wholesale,
+# then re-runs the equivalence subset explicitly (the soak stays out — it
+# is also marked `slow`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+if [[ "${1:-}" == "--full" ]]; then
+    exec python -m pytest -x -q
+fi
+
+python -m pytest -x -q -m "not slow and not streaming"
+python -m pytest -x -q -m "streaming and not slow" tests/test_serving.py

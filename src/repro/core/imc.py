@@ -26,7 +26,7 @@ threshold — DESIGN.md §3), so the model is exact and jit-friendly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -160,15 +160,26 @@ def sample_chip_offsets(key: jax.Array, channels_per_layer: Dict[str, int],
 def mav_sa(counts: jax.Array, bias_int: jax.Array, flip: jax.Array,
            mav_offset: jax.Array | None = None,
            sa_key: jax.Array | None = None,
-           sa_noise_std: float = 0.0) -> jax.Array:
+           sa_noise_std: float = 0.0,
+           sa_noise: jax.Array | None = None) -> jax.Array:
     """The macro's analog epilogue: sign(counts + bias + noise) with BN-decoder
     sign correction.  ``counts`` has channels on the last axis; ``bias_int``,
-    ``flip`` and ``mav_offset`` are per-channel."""
+    ``flip`` and ``mav_offset`` are per-channel.
+
+    The SA-noise realization comes either from ``sa_key``/``sa_noise_std``
+    (drawn here, one value per evaluation) or as an explicit ``sa_noise``
+    array broadcastable to ``counts`` — the streaming serving path draws its
+    noise from a per-absolute-column field so cached columns keep the exact
+    realization they were evaluated with (repro.serving.stream).  Both are
+    added at the same point in the float chain, so the paths stay
+    bit-identical."""
     pre = counts + bias_int
     if mav_offset is not None:
         pre = pre + mav_offset
     if sa_key is not None and sa_noise_std > 0.0:
         pre = pre + sa_noise_std * jax.random.normal(sa_key, pre.shape)
+    elif sa_noise is not None:
+        pre = pre + sa_noise
     return binarize(pre * flip)
 
 
@@ -238,6 +249,11 @@ class GroupPackLayout:
         return self.gpb * self.cog
 
 
+# Static pytree node: layouts ride inside PackedHWParams through jit
+# boundaries as aux data (they are shape metadata, not arrays).
+jax.tree_util.register_static(GroupPackLayout)
+
+
 def make_group_pack_layout(groups: int, cog: int, k: int, cpg: int,
                            lanes: int = 128) -> GroupPackLayout:
     kg = k * cpg
@@ -297,6 +313,48 @@ def pack_grouped_patches(x: jax.Array, layout: GroupPackLayout, k: int,
     win = win.reshape(b, t_use, k, lt.g_pad, cpg).transpose(0, 1, 3, 2, 4)
     win = win.reshape(b * t_use, lt.packs, lt.k_pack)
     return win.transpose(1, 0, 2)
+
+
+class PackedLayer(NamedTuple):
+    """Fold-time packed operands of one fused IMC layer.
+
+    The block-diagonal weights and per-channel bias/flip are packed once
+    (``pack_layer``) and MXU-lane padded, so the per-decision path only packs
+    the data-dependent im2col patches — the programming of the SRAM arrays
+    happens at fold time, not per decision.  ``layout`` is a static pytree
+    node, so a PackedLayer passes transparently through jit."""
+
+    layout: GroupPackLayout
+    wp: jax.Array          # (packs, k_pad, n_pad) block-diagonal ±1 weights
+    bias_p: jax.Array      # (packs, n_pad) word-line bias
+    flip_p: jax.Array      # (packs, n_pad) BN-decoder sign (pad lanes = +1)
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value: float = 0.0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pack_layer(w: jax.Array, bias: jax.Array, flip: jax.Array,
+               groups: int, lanes: int = 128) -> PackedLayer:
+    """Pack one grouped layer's static operands for the fused kernel.
+
+    Identical padding to what ops.fused_conv_mav applies per call, so the
+    precomputed and on-the-fly paths are bit-identical."""
+    k, cpg, c_out = w.shape
+    layout = make_group_pack_layout(groups, c_out // groups, k, cpg, lanes)
+    k_pad = -(-layout.k_pack // lanes) * lanes
+    n_pad = -(-layout.n_pack // lanes) * lanes
+    wp = _pad_axis(_pad_axis(pack_grouped_weights(w, layout), 1, k_pad),
+                   2, n_pad)
+    bias_p = _pad_axis(pack_channel_param(bias, layout), 1, n_pad)
+    flip_p = _pad_axis(pack_channel_param(flip, layout, fill=1.0), 1, n_pad,
+                       value=1.0)
+    return PackedLayer(layout=layout, wp=wp, bias_p=bias_p, flip_p=flip_p)
 
 
 # ---------------------------------------------------------------------------

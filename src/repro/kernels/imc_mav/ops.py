@@ -4,9 +4,11 @@ interface used by repro.models.kws.
 
 ``fused_conv_mav`` is the inference hot path: the whole IMC layer (grouped
 binary conv + in-memory BN + SA + channel shuffle + OR-maxpool) in exactly
-one ``pallas_call`` with the group dimension in the kernel grid.  The
-per-group ``conv_mav`` loop below it is kept as the seed baseline the fused
-kernel is benchmarked against (see benchmarks/run.py::imc_fused_bench).
+one ``pallas_call`` with the group dimension in the kernel grid.
+``fused_conv_mav_step`` is its time-sliced streaming entry (grid restricted
+to a hop's fresh columns — see repro.serving.stream).  The per-group
+``conv_mav`` loop below it is kept as the seed baseline the fused kernel is
+benchmarked against (see benchmarks/run.py::imc_fused_bench).
 """
 
 from __future__ import annotations
@@ -22,12 +24,10 @@ from repro.kernels.imc_mav.imc_mav import imc_fused, imc_mav
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int, value: float = 0.0):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x, 0
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value), pad
+    # one pad implementation shared with the fold-time packing
+    # (core.imc.pack_layer) so both paths stay bit-identical by construction
+    padded = imc._pad_axis(x, axis, mult, value)
+    return padded, padded.shape[axis] - x.shape[axis]
 
 
 def mav_matmul(x: jax.Array, w: jax.Array, bias: jax.Array, flip: jax.Array,
@@ -100,7 +100,9 @@ def fused_conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array,
                    chip_offset: jax.Array | None = None,
                    sa_key: jax.Array | None = None,
                    sa_noise_std: float = 0.0,
-                   interpret: bool | None = None) -> jax.Array:
+                   sa_noise: jax.Array | None = None,
+                   interpret: bool | None = None,
+                   packed: imc.PackedLayer | None = None) -> jax.Array:
     """The whole IMC layer in one ``pallas_call``: grouped binary conv +
     static chip offset + in-memory BN bias + SA noise + BN-decoder flip +
     SA sign + channel shuffle + OR-maxpool.
@@ -110,12 +112,18 @@ def fused_conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array,
     *post-shuffle* channel order — the shuffle is the kernel's output index
     map (see imc_mav.py), not a separate pass.
 
-    Bit-identical (noise path included: the SA noise realization is drawn
-    with the same key/shape as ``core.imc.mav_sa``) to
+    The SA noise realization is either drawn here from ``sa_key`` (same
+    key/shape as ``core.imc.mav_sa``) or supplied explicitly as ``sa_noise``
+    (B, t_out, C_out) — the streaming path evaluates a per-absolute-column
+    noise field so cached columns keep their realization across hops.
+    ``packed`` (see ``core.imc.pack_layer``) supplies the fold-time packed
+    weights/bias/flip so only the data-dependent patches are packed per call.
+
+    Bit-identical (noise path included) to
 
         counts = imc.binary_group_conv_counts(x, w, groups, stride)
         h = imc.mav_sa(counts + chip_offset, bias, flip, sa_key=...,
-                       sa_noise_std=...)
+                       sa_noise_std=..., sa_noise=...)
         h = or_maxpool(channel_shuffle(h, groups), pool, axis=1)
     """
     if interpret is None:
@@ -131,21 +139,28 @@ def fused_conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array,
             f"fused_conv_mav: input T={t} yields no complete pool window "
             f"(k={k}, stride={stride}, pool={pool}) — input too short for "
             f"this layer")
-    layout = imc.make_group_pack_layout(groups, cog, k, cpg)
+    if packed is None:
+        packed = imc.pack_layer(w, bias, flip, groups)
+    layout = packed.layout
+    assert layout == imc.make_group_pack_layout(groups, cog, k, cpg), \
+        "packed operands do not match this layer's shape"
+    k_pad, n_pad = packed.wp.shape[1], packed.wp.shape[2]
 
     xp = imc.pack_grouped_patches(x, layout, k, stride, t_use)
-    wp = imc.pack_grouped_weights(w, layout)
     off = (jnp.zeros((c_out,), jnp.float32) if chip_offset is None
            else chip_offset.astype(jnp.float32))
     offp = imc.pack_channel_param(off, layout)
-    bp = imc.pack_channel_param(bias, layout)
-    fp = imc.pack_channel_param(flip, layout, fill=1.0)
 
     noisep = None
     if sa_key is not None and sa_noise_std > 0:
         # Same draw as the jnp path (imc.mav_sa over (B, t_out, C_out)) so
         # the fused layer is bit-identical noise included.
         noise = sa_noise_std * jax.random.normal(sa_key, (b, t_out, c_out))
+    elif sa_noise is not None:
+        noise = sa_noise
+    else:
+        noise = None
+    if noise is not None:
         noise = noise[:, :t_use].reshape(b * t_use, c_out)
         noise = jnp.pad(noise, ((0, 0), (0, layout.g_pad * cog - c_out)))
         noisep = noise.reshape(b * t_use, layout.packs,
@@ -157,21 +172,52 @@ def fused_conv_mav(x: jax.Array, w: jax.Array, bias: jax.Array,
     bm_out = -(-min(256, -(-m0 // pool)) // 8) * 8
     bm = bm_out * pool
     xp, _ = _pad_to(xp, 1, bm)
-    k_pad = (-(-layout.k_pack // 128)) * 128          # MXU lane alignment
-    n_pad = (-(-layout.n_pack // 128)) * 128
     xp, _ = _pad_to(xp, 2, k_pad)
-    wp, _ = _pad_to(wp, 1, k_pad)
-    wp, _ = _pad_to(wp, 2, n_pad)
     offp, _ = _pad_to(offp, 1, n_pad)
-    bp, _ = _pad_to(bp, 1, n_pad)
-    fp, _ = _pad_to(fp, 1, n_pad, value=1.0)
     if noisep is not None:
         noisep, _ = _pad_to(noisep, 1, bm)
         noisep, _ = _pad_to(noisep, 2, n_pad)
 
-    out = imc_fused(xp, wp, offp, bp, fp, noisep, gpb=layout.gpb, cog=cog,
+    out = imc_fused(xp, packed.wp, offp, packed.bias_p, packed.flip_p,
+                    noisep, gpb=layout.gpb, cog=cog,
                     pool=pool, bm=bm, interpret=interpret)
     # (M_pad/pool, cog, g_pad): crop pad rows/groups; flattening (cog,
     # groups) is exactly channel_shuffle's a*groups + g order.
     out = out[:b * t_pool, :, :groups]
     return out.reshape(b, t_pool, c_out)
+
+
+def fused_conv_mav_step(x_tail: jax.Array, w: jax.Array, bias: jax.Array,
+                        flip: jax.Array, groups: int, stride: int = 1,
+                        pool: int = 1,
+                        chip_offset: jax.Array | None = None,
+                        sa_noise: jax.Array | None = None,
+                        interpret: bool | None = None,
+                        packed: imc.PackedLayer | None = None) -> jax.Array:
+    """Time-sliced (frame-incremental) entry into the fused IMC layer.
+
+    ``x_tail`` (B, T_tail, C_in) is the layer's streaming tail: the carry
+    columns cached from the previous hop (the k-1 conv overlap plus, on
+    odd-length pooling layers, the conv column the previous window's
+    OR-maxpool truncated) followed by the hop's fresh input columns
+    (repro.serving.stream computes the geometry).  Same pack layout as the
+    full-window call; the kernel grid is restricted to the new output
+    columns because M = B * T_tail_use instead of B * T_window — the
+    per-hop work is the hop/window fraction of a full decision.
+
+    The caller guarantees the tail starts on a pool-window boundary of the
+    full window, so the fused OR-maxpool pairs exactly the columns the
+    offline path pairs.  ``sa_noise`` (B, t_conv_tail, C_out) must hold the
+    noise-field values of the tail's absolute conv columns for the noisy
+    path to stay bit-identical to the offline window."""
+    t_tail = x_tail.shape[1]
+    k = w.shape[0]
+    t_conv = (t_tail - k) // stride + 1
+    if t_conv < pool:
+        raise ValueError(
+            f"fused_conv_mav_step: tail T={t_tail} yields {t_conv} conv "
+            f"columns — not enough for one pool-{pool} window")
+    return fused_conv_mav(x_tail, w, bias, flip, groups=groups,
+                          stride=stride, pool=pool, chip_offset=chip_offset,
+                          sa_noise=sa_noise, interpret=interpret,
+                          packed=packed)

@@ -324,15 +324,48 @@ class HWParams(NamedTuple):
     fc_b: jax.Array
 
 
+class PackedHWParams(NamedTuple):
+    """HWParams plus the fused kernel's fold-time packed operands.
+
+    Packing the block-diagonal weights / bias / flip once at fold time
+    (``fold_params(pack=True)`` or ``pack_hw_params``) models programming
+    the SRAM arrays: per decision only the data-dependent im2col patches
+    are packed.  Everything that accepts HWParams (hw_forward, evaluate_hw,
+    the serving engine) accepts a PackedHWParams transparently."""
+
+    hw: HWParams
+    packed: Dict[str, imc.PackedLayer]     # conv1..conv5
+
+
+def as_hw_params(hw) -> Tuple[HWParams, Optional[Dict[str, imc.PackedLayer]]]:
+    """Normalize an HWParams-or-PackedHWParams to (hw, packed-or-None)."""
+    if isinstance(hw, PackedHWParams):
+        return hw.hw, hw.packed
+    return hw, None
+
+
+def pack_hw_params(hw: HWParams, cfg: KWSConfig = PAPER_KWS) -> PackedHWParams:
+    """Pack every IMC layer's fused-kernel operands once (fold time)."""
+    hw, _ = as_hw_params(hw)
+    packed = {}
+    for i in range(1, cfg.num_conv_layers):
+        name = f"conv{i}"
+        packed[name] = imc.pack_layer(hw.w_bin[name], hw.bias[name],
+                                      hw.flip[name], cfg.groups(i))
+    return PackedHWParams(hw=hw, packed=packed)
+
+
 def fold_params(params, state: KWSState, cfg: KWSConfig = PAPER_KWS,
                 macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
                 bn_constraints: bool = True,
-                fc_quant: bool = True) -> HWParams:
+                fc_quant: bool = True,
+                pack: bool = False):
     """Fold BN (+ learnable offsets) into biases; apply the IMC bias grid
     (parity + [-64,64]) for IMC layers; quantize the FC to 8 bits.
 
     ``bn_constraints=False`` / ``fc_quant=False`` give the Table III ablation
-    points.
+    points.  ``pack=True`` additionally packs the fused kernel's operands
+    (returns PackedHWParams) so the per-decision path never repacks weights.
     """
     w_bin, bias, flip = {}, {}, {}
     for i in range(cfg.num_conv_layers):
@@ -357,19 +390,59 @@ def fold_params(params, state: KWSState, cfg: KWSConfig = PAPER_KWS,
     fw, fb = params["fc"]["w"], params["fc"]["b"]
     if fc_quant:
         fw, fb = WEIGHT_Q.quantize(fw), WEIGHT_Q.quantize(fb)
-    return HWParams(w_bin=w_bin, bias=bias, flip=flip, fc_w=fw, fc_b=fb)
+    hw = HWParams(w_bin=w_bin, bias=bias, flip=flip, fc_w=fw, fc_b=fb)
+    return pack_hw_params(hw, cfg) if pack else hw
 
 
-def hw_forward(hw: HWParams, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
+def hw_conv_layer(hw: HWParams, i: int, h: jax.Array,
+                  cfg: KWSConfig = PAPER_KWS, *,
+                  packed: Optional[imc.PackedLayer] = None,
+                  chip_offset: Optional[jax.Array] = None,
+                  sa_key: Optional[jax.Array] = None,
+                  sa_noise: Optional[jax.Array] = None,
+                  sa_noise_std: float = 0.0,
+                  use_kernel: bool = False) -> jax.Array:
+    """One conv layer of the hardware path on activations (B, T, C_in)
+    (layer 0: (B, T, 1) audio): counts -> mav_sa -> shuffle -> OR-pool.
+
+    Shared by ``hw_forward`` (full windows) and the streaming serving path
+    (repro.serving.stream, which feeds per-hop tail slices) so both run the
+    exact same op chain.  ``sa_noise`` is an explicit (B, t_conv, C_out)
+    pre-pool noise realization, mutually exclusive with ``sa_key``; the
+    caller passes None noise/offset for the digital layer 0."""
+    name = f"conv{i}"
+    if use_kernel and i > 0:
+        from repro.kernels.imc_mav import ops as mav_ops
+        return mav_ops.fused_conv_mav(
+            h, hw.w_bin[name], hw.bias[name], hw.flip[name],
+            groups=cfg.groups(i), stride=cfg.strides[i],
+            pool=cfg.pools[i], chip_offset=chip_offset, sa_key=sa_key,
+            sa_noise=sa_noise, sa_noise_std=sa_noise_std, packed=packed)
+    counts = _conv_counts(h, hw.w_bin[name], cfg.strides[i], cfg.groups(i))
+    if chip_offset is not None:
+        counts = counts + chip_offset
+    h = imc.mav_sa(counts, hw.bias[name], hw.flip[name],
+                   mav_offset=None, sa_key=sa_key, sa_noise=sa_noise,
+                   sa_noise_std=sa_noise_std)
+    h = channel_shuffle(h, cfg.groups(i))              # Fig 9 digital block
+    if cfg.pools[i] > 1:
+        h = or_maxpool(h, cfg.pools[i], axis=1)
+    return h
+
+
+def hw_forward(hw, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
                chip_offsets: Optional[Dict[str, jax.Array]] = None,
                sa_noise_std: float = 0.0,
                rng: Optional[jax.Array] = None,
                collect_counts: bool = False,
-               use_kernel: bool = False):
+               use_kernel: bool = False,
+               sa_noise: Optional[Dict[str, jax.Array]] = None):
     """The silicon path: integer counts -> in-memory BN -> SA sign.
 
-    Returns (logits, features) and, with collect_counts, the per-layer pre-SA
-    counts (the chip's test mode, used for bias-compensation calibration).
+    ``hw`` is an HWParams or a PackedHWParams (fold-time packed fused-kernel
+    operands).  Returns (logits, features) and, with collect_counts, the
+    per-layer pre-SA counts (the chip's test mode, used for bias-compensation
+    calibration).
 
     With ``use_kernel=True`` every IMC layer (conv1..conv5) runs as exactly
     one fused ``pallas_call`` — grouped conv + chip offset + word-line bias +
@@ -378,7 +451,15 @@ def hw_forward(hw: HWParams, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
     draw the SA realization from the same per-layer key).  ``collect_counts``
     (the chip's digitize-the-counts test mode) forces the unfused path, since
     the fused kernel never materializes counts — exactly like the silicon.
-    """
+
+    SA noise comes from ``rng``/``sa_noise_std`` (fresh draw per layer) or
+    from ``sa_noise``, an explicit per-layer dict of (B, t_conv, C_out)
+    pre-pool realizations — the streaming equivalence contract
+    (repro.serving.stream) uses the explicit form so offline windows can
+    reproduce the per-absolute-column noise field bit-exactly."""
+    hw, packed_all = as_hw_params(hw)
+    if rng is not None and sa_noise is not None:
+        raise ValueError("pass either rng or explicit sa_noise, not both")
     counts_log: Dict[str, jax.Array] = {}
     use_fused = use_kernel and not collect_counts
     h = x[..., None]
@@ -387,23 +468,27 @@ def hw_forward(hw: HWParams, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
         key = None
         if rng is not None and sa_noise_std > 0.0 and i > 0:
             rng, key = jax.random.split(rng)
-        if use_fused and i > 0:
-            from repro.kernels.imc_mav import ops as mav_ops
-            off = None if chip_offsets is None else chip_offsets[name]
-            h = mav_ops.fused_conv_mav(
-                h, hw.w_bin[name], hw.bias[name], hw.flip[name],
-                groups=cfg.groups(i), stride=cfg.strides[i],
-                pool=cfg.pools[i], chip_offset=off, sa_key=key,
-                sa_noise_std=sa_noise_std)
+        noise_i = None
+        if sa_noise is not None and i > 0:
+            noise_i = sa_noise.get(name)
+        off_i = None
+        if chip_offsets is not None and i > 0:
+            off_i = chip_offsets[name]
+        if not collect_counts:
+            packed_i = packed_all[name] if (packed_all and i > 0) else None
+            h = hw_conv_layer(hw, i, h, cfg, packed=packed_i,
+                              chip_offset=off_i, sa_key=key,
+                              sa_noise=noise_i,
+                              sa_noise_std=sa_noise_std if i > 0 else 0.0,
+                              use_kernel=use_fused)
             continue
         counts = _conv_counts(h, hw.w_bin[name], cfg.strides[i],
                               cfg.groups(i))
-        if chip_offsets is not None and i > 0:
-            counts = counts + chip_offsets[name]
-        if collect_counts:
-            counts_log[name] = counts
+        if off_i is not None:
+            counts = counts + off_i
+        counts_log[name] = counts
         h = imc.mav_sa(counts, hw.bias[name], hw.flip[name],
-                       mav_offset=None, sa_key=key,
+                       mav_offset=None, sa_key=key, sa_noise=noise_i,
                        sa_noise_std=sa_noise_std if i > 0 else 0.0)
         h = channel_shuffle(h, cfg.groups(i))          # Fig 9 digital block
         if cfg.pools[i] > 1:

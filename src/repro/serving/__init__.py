@@ -1,0 +1,36 @@
+"""Always-on streaming KWS serving over the hardware-folded model.
+
+The deployment shape of the paper's accelerator: a sliding decision window
+advanced by a hop, with frame-incremental reuse of every IMC layer's
+activation columns between hops (the per-decision work drops to roughly
+hop/window of a full forward), a smoothed/hysteresis decision head, and a
+slot-based scheduler that batches many live streams into one fused-kernel
+launch per layer.
+
+  stream.py     — hop geometry, per-stream ring state, init/step, the
+                  per-absolute-column SA-noise field, work accounting
+  decision.py   — posterior smoothing + hysteresis + refractory triggers
+  scheduler.py  — StreamServer: slots, admission queue, batched hops,
+                  eviction, latency/throughput stats
+
+Bit-exactness contract: N hops of the streaming path equal ``hw_forward``
+on each full window — noise and chip-offset configurations included — and
+``streaming=False`` falls back to exactly that recompute path.
+"""
+
+from repro.serving.decision import (DecisionConfig, DecisionOut,
+                                    DecisionState, decision_init,
+                                    decision_step)
+from repro.serving.scheduler import StreamServer
+from repro.serving.stream import (StreamEngine, StreamGeometry, StreamState,
+                                  hop_alignment, make_stream_geometry,
+                                  sa_noise_columns, stream_init, stream_step,
+                                  streaming_layer_stats, window_sa_noise)
+
+__all__ = [
+    "DecisionConfig", "DecisionOut", "DecisionState", "decision_init",
+    "decision_step", "StreamServer", "StreamEngine", "StreamGeometry",
+    "StreamState", "hop_alignment", "make_stream_geometry",
+    "sa_noise_columns", "stream_init", "stream_step",
+    "streaming_layer_stats", "window_sa_noise",
+]

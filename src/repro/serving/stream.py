@@ -1,0 +1,436 @@
+"""Frame-incremental streaming inference over the folded KWS model.
+
+The paper's accelerator is *always-on*: it emits one decision per hop of a
+sliding audio window.  Recomputing the whole window per decision (what
+``hw_forward`` does) wastes exactly the work the 14uJ/decision budget
+forbids — the overlap between consecutive windows is ``1 - hop/window`` of
+every layer.  This module computes each hop incrementally:
+
+* every layer's activation columns are indexed by *absolute time*.  When the
+  hop is a multiple of ``hop_alignment(cfg)`` (the product of all strides
+  and pool windows, 64 samples for the paper net), consecutive windows'
+  overlapping columns are **identical** at every layer, pool pairs included,
+  so cached columns can be reused verbatim;
+* per hop, each layer only computes its tail: the hop's fresh columns plus a
+  tiny carry — the k-1 conv overlap columns and, on layers whose conv length
+  is odd, the one conv column the previous window's OR-maxpool truncated
+  (that carry IS the pool ring state: the truncated column is recomputed and
+  pooled next hop, exactly as the offline window would);
+* SA noise is drawn from a per-absolute-column field
+  (``fold_in(fold_in(stream_key, layer), abs_col)``), mirroring the silicon:
+  each column is evaluated by the sense amplifier exactly once, and its
+  realization rides along with the cached activation.  Offline windows can
+  evaluate the same field (``window_sa_noise``) and feed it to
+  ``hw_forward(sa_noise=...)``, which is how the streaming path is
+  test-enforced bit-identical to per-window ``hw_forward`` on every hop,
+  noise and chip offsets included.
+
+``StreamEngine`` wraps init/step as jitted functions over a batch of
+streams (the scheduler batches all active slots into ONE fused-kernel
+launch per layer); ``streaming=False`` selects the recompute fallback,
+which calls ``hw_forward`` on the full window per hop and is bit-identical
+to it by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import ACT_Q
+from repro.models import kws
+
+# ---------------------------------------------------------------------------
+# Geometry: what each layer computes per hop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGeom:
+    """Static per-layer streaming geometry (one hop).
+
+    t_in/t_conv/t_out: the layer's full-window input / conv / post-pool
+    lengths; d_in/d_out: fresh input/output columns per hop; conv_lo: local
+    conv column where the per-hop tail starts (pool-aligned by
+    construction); tail_in: input columns consumed per hop; carry =
+    tail_in - d_in: columns cached across hops (conv overlap + pool phase).
+    """
+
+    t_in: int
+    t_conv: int
+    t_out: int
+    d_in: int
+    d_out: int
+    conv_lo: int
+    tail_in: int
+    carry: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamGeometry:
+    window: int
+    hop: int
+    layers: Tuple[LayerGeom, ...]          # one per conv layer (0..5)
+
+    @property
+    def t_feat(self) -> int:
+        """Final layer's pooled length — the GAP ring extent."""
+        return self.layers[-1].t_out
+
+    @property
+    def d_feat(self) -> int:
+        """Fresh final-layer columns per hop (GAP ring shift)."""
+        return self.layers[-1].d_out
+
+
+jax.tree_util.register_static(LayerGeom)
+jax.tree_util.register_static(StreamGeometry)
+
+
+def hop_alignment(cfg: kws.KWSConfig) -> int:
+    """Smallest hop (in samples) with full column reuse: the product of all
+    strides and pool windows (64 for the paper net).  Any multiple works."""
+    a = 1
+    for i in range(cfg.num_conv_layers):
+        a *= cfg.strides[i] * cfg.pools[i]
+    return a
+
+
+def make_stream_geometry(cfg: kws.KWSConfig, hop: int) -> StreamGeometry:
+    """Static per-layer tail/carry geometry for a hop size.
+
+    Raises if ``hop`` is not a multiple of ``hop_alignment(cfg)`` (pool
+    pairs would straddle hops and cached columns would go stale) or if the
+    hop is too small to produce at least one fresh column everywhere."""
+    align = hop_alignment(cfg)
+    if hop % align or hop <= 0:
+        raise ValueError(
+            f"hop={hop} must be a positive multiple of {align} "
+            f"(prod of strides*pools) for bit-exact column reuse")
+    if hop >= cfg.sample_len:
+        raise ValueError(f"hop={hop} must be smaller than the "
+                         f"window ({cfg.sample_len})")
+    layers = []
+    t_in, d_in = cfg.sample_len, hop
+    for i in range(cfg.num_conv_layers):
+        k, s, p = cfg.kernels[i], cfg.strides[i], cfg.pools[i]
+        t_conv = (t_in - k) // s + 1
+        t_out = t_conv // p
+        n_new = d_in // s                  # fresh conv columns per hop
+        d_out = n_new // p
+        assert d_in % s == 0 and n_new % p == 0, "hop_alignment violated"
+        if d_out < 1 or d_out > t_out:
+            raise ValueError(
+                f"layer {i}: hop yields {d_out} fresh columns of {t_out} — "
+                f"hop/window ratio unusable at this depth")
+        conv_lo = p * (t_out - d_out)      # pool-aligned tail start
+        tail_in = t_in - s * conv_lo
+        layers.append(LayerGeom(t_in=t_in, t_conv=t_conv, t_out=t_out,
+                                d_in=d_in, d_out=d_out, conv_lo=conv_lo,
+                                tail_in=tail_in, carry=tail_in - d_in))
+        t_in, d_in = t_out, d_out
+    return StreamGeometry(window=cfg.sample_len, hop=hop,
+                          layers=tuple(layers))
+
+
+# ---------------------------------------------------------------------------
+# Per-absolute-column SA-noise field
+# ---------------------------------------------------------------------------
+
+
+def sa_noise_columns(key: jax.Array, layer: int, cols: jax.Array,
+                     c_out: int, std: float) -> jax.Array:
+    """Noise-field values for one stream: (n_cols,) absolute conv column
+    indices -> (n_cols, c_out).  Column ``a`` of layer ``l`` always yields
+    the same realization for the same stream key — the SA evaluates each
+    column once, and its noise sample is a property of that evaluation."""
+    base = jax.random.fold_in(key, layer)
+    return std * jax.vmap(
+        lambda a: jax.random.normal(jax.random.fold_in(base, a),
+                                    (c_out,)))(cols)
+
+
+def window_sa_noise(key: jax.Array, cfg: kws.KWSConfig,
+                    geom: StreamGeometry, hop_index,
+                    std: float) -> Dict[str, jax.Array]:
+    """The full-window view of the noise field: per-layer (1, t_conv, C)
+    arrays for window ``hop_index``, in ``hw_forward(sa_noise=...)`` layout.
+    Feeding this to hw_forward reproduces the streaming path bit-exactly —
+    the offline oracle for the equivalence tests and the recompute engine's
+    noise source."""
+    noise = {}
+    for i in range(1, cfg.num_conv_layers):
+        lg = geom.layers[i]
+        n_new = lg.d_out * cfg.pools[i]
+        cols = hop_index * n_new + jnp.arange(lg.t_conv)
+        noise[f"conv{i}"] = sa_noise_columns(key, i, cols, cfg.channels[i],
+                                             std)[None]
+    return noise
+
+
+def _hop_sa_noise(keys: jax.Array, hops: jax.Array, layer: int,
+                  cfg: kws.KWSConfig, geom: StreamGeometry,
+                  std: float) -> jax.Array:
+    """Field values for one hop's tail conv columns, batched over streams:
+    keys (B, 2), hops (B,) -> (B, t_conv_tail, C)."""
+    lg = geom.layers[layer]
+    n_new = lg.d_out * cfg.pools[layer]
+    n_tail = lg.t_conv - lg.conv_lo
+
+    def one(key, hop):
+        cols = hop * n_new + lg.conv_lo + jnp.arange(n_tail)
+        return sa_noise_columns(key, layer, cols, cfg.channels[layer], std)
+
+    return jax.vmap(one)(keys, hops)
+
+
+# ---------------------------------------------------------------------------
+# Stream state + init/step
+# ---------------------------------------------------------------------------
+
+
+class StreamState(NamedTuple):
+    """Per-stream incremental state (leading axis = batch of streams).
+
+    ``audio_carry``/``carries`` are the layers' ring tails (the only
+    activation columns that must survive a hop); ``ring`` is the final
+    layer's full pooled window, feeding GAP; ``hop`` counts decided windows
+    (window t's columns live at absolute index t*shift + local); ``key`` is
+    the per-stream noise-field key."""
+
+    audio_carry: jax.Array                 # (B, carry_0) raw samples
+    carries: Tuple[jax.Array, ...]         # (B, carry_i, C_{i-1}), i=1..
+    ring: jax.Array                        # (B, t_feat, C_last)
+    hop: jax.Array                         # (B,) int32
+    key: jax.Array                         # (B, 2) uint32
+
+
+class WindowState(NamedTuple):
+    """Recompute-fallback state: the raw audio window only."""
+
+    window: jax.Array                      # (B, window)
+    hop: jax.Array                         # (B,) int32
+    key: jax.Array                         # (B, 2) uint32
+
+
+def zeros_state(cfg: kws.KWSConfig, geom: StreamGeometry,
+                n: int) -> StreamState:
+    carries = tuple(
+        jnp.zeros((n, geom.layers[i].carry, cfg.channels[i - 1]))
+        for i in range(1, cfg.num_conv_layers))
+    return StreamState(
+        audio_carry=jnp.zeros((n, geom.layers[0].carry)),
+        carries=carries,
+        ring=jnp.zeros((n, geom.t_feat, cfg.channels[-1])),
+        hop=jnp.zeros((n,), jnp.int32),
+        key=jnp.zeros((n, 2), jnp.uint32))
+
+
+def zeros_window_state(cfg: kws.KWSConfig, n: int) -> WindowState:
+    return WindowState(window=jnp.zeros((n, cfg.sample_len)),
+                       hop=jnp.zeros((n,), jnp.int32),
+                       key=jnp.zeros((n, 2), jnp.uint32))
+
+
+def _tail(x: jax.Array, n: int) -> jax.Array:
+    """Last ``n`` columns of axis 1 — unlike ``x[:, -n:]`` this stays an
+    empty slice when a layer's carry is 0 (k == stride, no pool phase)."""
+    return x[:, x.shape[1] - n:]
+
+
+def _gap_fc(hw: kws.HWParams, ring: jax.Array):
+    feats = ACT_Q.quantize(jnp.mean(ring, axis=1))
+    return feats @ hw.fc_w + hw.fc_b, feats
+
+
+def stream_init(hw, window: jax.Array, keys: jax.Array,
+                cfg: kws.KWSConfig, geom: StreamGeometry, *,
+                chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                sa_noise_std: float = 0.0,
+                use_kernel: bool = True):
+    """Process a stream's first full window (B, window) and build its
+    incremental state.  Equivalent to hw_forward on the window (hop 0 of
+    the noise field), plus capturing each layer's ring tail."""
+    hwp, packed = kws.as_hw_params(hw)
+    b = window.shape[0]
+    hops0 = jnp.zeros((b,), jnp.int32)
+    h = window[..., None]
+    carries = []
+    for i in range(cfg.num_conv_layers):
+        noise = off = packed_i = None
+        if i > 0:
+            carries.append(_tail(h, geom.layers[i].carry))
+            if sa_noise_std > 0.0:
+                lg = geom.layers[i]
+                cols = jnp.arange(lg.t_conv)
+                noise = jax.vmap(lambda k: sa_noise_columns(
+                    k, i, cols, cfg.channels[i], sa_noise_std))(keys)
+            if chip_offsets is not None:
+                off = chip_offsets[f"conv{i}"]
+            packed_i = packed[f"conv{i}"] if packed else None
+        h = kws.hw_conv_layer(hwp, i, h, cfg, packed=packed_i,
+                              chip_offset=off, sa_noise=noise,
+                              use_kernel=use_kernel)
+    logits, _ = _gap_fc(hwp, h)
+    state = StreamState(audio_carry=_tail(window, geom.layers[0].carry),
+                        carries=tuple(carries), ring=h,
+                        hop=hops0 + 1, key=keys)
+    return logits, state
+
+
+def stream_step(hw, state: StreamState, audio: jax.Array,
+                cfg: kws.KWSConfig, geom: StreamGeometry, *,
+                chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                sa_noise_std: float = 0.0,
+                use_kernel: bool = True):
+    """Advance a batch of streams by one hop: audio (B, hop) -> (logits,
+    new state).  Each layer computes only its tail (carry + fresh columns)
+    — one fused-kernel launch per IMC layer for the whole batch — and the
+    decision is re-formed from the GAP ring.  Bit-identical to hw_forward
+    on the corresponding full window (the equivalence tests drive both)."""
+    hwp, packed = kws.as_hw_params(hw)
+    x = jnp.concatenate([state.audio_carry, audio], axis=1)
+    new_audio_carry = _tail(x, geom.layers[0].carry)
+    h = kws.hw_conv_layer(hwp, 0, x[..., None], cfg)
+    new_carries = []
+    for i in range(1, cfg.num_conv_layers):
+        lg = geom.layers[i]
+        name = f"conv{i}"
+        inp = jnp.concatenate([state.carries[i - 1], h], axis=1)
+        new_carries.append(_tail(inp, lg.carry))
+        noise = None
+        if sa_noise_std > 0.0:
+            noise = _hop_sa_noise(state.key, state.hop, i, cfg, geom,
+                                  sa_noise_std)
+        off = chip_offsets[name] if chip_offsets is not None else None
+        if use_kernel:
+            from repro.kernels.imc_mav import ops as mav_ops
+            h = mav_ops.fused_conv_mav_step(
+                inp, hwp.w_bin[name], hwp.bias[name], hwp.flip[name],
+                groups=cfg.groups(i), stride=cfg.strides[i],
+                pool=cfg.pools[i], chip_offset=off, sa_noise=noise,
+                packed=packed[name] if packed else None)
+        else:
+            h = kws.hw_conv_layer(hwp, i, inp, cfg, chip_offset=off,
+                                  sa_noise=noise, use_kernel=False)
+    ring = jnp.concatenate([state.ring[:, geom.d_feat:], h], axis=1)
+    logits, _ = _gap_fc(hwp, ring)
+    new_state = StreamState(audio_carry=new_audio_carry,
+                            carries=tuple(new_carries), ring=ring,
+                            hop=state.hop + 1, key=state.key)
+    return logits, new_state
+
+
+def window_init(hw, window: jax.Array, keys: jax.Array,
+                cfg: kws.KWSConfig, geom: StreamGeometry, *,
+                chip_offsets=None, sa_noise_std: float = 0.0,
+                use_kernel: bool = True):
+    """Recompute-fallback init: hw_forward on the first window."""
+    logits, state = _window_forward(hw, window, keys,
+                                    jnp.zeros((window.shape[0],), jnp.int32),
+                                    cfg, geom, chip_offsets=chip_offsets,
+                                    sa_noise_std=sa_noise_std,
+                                    use_kernel=use_kernel)
+    return logits, state
+
+
+def window_step(hw, state: WindowState, audio: jax.Array,
+                cfg: kws.KWSConfig, geom: StreamGeometry, *,
+                chip_offsets=None, sa_noise_std: float = 0.0,
+                use_kernel: bool = True):
+    """Recompute-fallback hop: slide the audio window, rerun hw_forward on
+    all of it.  Bit-identical to the streaming path (same noise field),
+    just ~window/hop times the work — the baseline --streaming benches
+    against."""
+    window = jnp.concatenate([state.window[:, geom.hop:], audio], axis=1)
+    return _window_forward(hw, window, state.key, state.hop, cfg, geom,
+                           chip_offsets=chip_offsets,
+                           sa_noise_std=sa_noise_std, use_kernel=use_kernel)
+
+
+def _window_forward(hw, window, keys, hops, cfg, geom, *, chip_offsets,
+                    sa_noise_std, use_kernel):
+    noise = None
+    if sa_noise_std > 0.0:
+        per_layer = jax.vmap(
+            lambda k, t: window_sa_noise(k, cfg, geom, t, sa_noise_std))(
+                keys, hops)
+        noise = {name: v[:, 0] for name, v in per_layer.items()}
+    logits, _ = kws.hw_forward(hw, window, cfg, chip_offsets=chip_offsets,
+                               sa_noise_std=sa_noise_std, sa_noise=noise,
+                               use_kernel=use_kernel)
+    return logits, WindowState(window=window, hop=hops + 1, key=keys)
+
+
+# ---------------------------------------------------------------------------
+# Jitted engine over a fixed batch of streams
+# ---------------------------------------------------------------------------
+
+
+class StreamEngine:
+    """Init/step over a fixed-size batch of streams, jit-compiled once.
+
+    ``streaming=True`` runs the frame-incremental path; ``streaming=False``
+    the recompute fallback (full hw_forward per hop, bit-identical by
+    construction).  The scheduler (repro.serving.scheduler) owns slots,
+    masking and admission; this class owns the pure compute."""
+
+    def __init__(self, hw, cfg: kws.KWSConfig, hop: int, *,
+                 chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                 sa_noise_std: float = 0.0, use_kernel: bool = True,
+                 streaming: bool = True):
+        self.cfg = cfg
+        self.geom = make_stream_geometry(cfg, hop)
+        self.streaming = streaming
+        kw = dict(chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
+                  use_kernel=use_kernel)
+        init = stream_init if streaming else window_init
+        step = stream_step if streaming else window_step
+        geom = self.geom
+        self._init = jax.jit(lambda w, k: init(hw, w, k, cfg, geom, **kw))
+        self._step = jax.jit(lambda s, a: step(hw, s, a, cfg, geom, **kw))
+
+    def zeros_state(self, n: int):
+        if self.streaming:
+            return zeros_state(self.cfg, self.geom, n)
+        return zeros_window_state(self.cfg, n)
+
+    def init(self, window: jax.Array, keys: jax.Array):
+        """First full window (B, window) -> (logits, state)."""
+        return self._init(window, keys)
+
+    def step(self, state, audio: jax.Array):
+        """One hop (B, hop) -> (logits, state)."""
+        return self._step(state, audio)
+
+
+# ---------------------------------------------------------------------------
+# Work accounting (feeds core.energy's streaming report)
+# ---------------------------------------------------------------------------
+
+
+def streaming_layer_stats(cfg: kws.KWSConfig, geom: StreamGeometry):
+    """Per-decision op counts of the *streaming* path, same schema as
+    ``kws.layer_stats``: each conv layer only touches its tail columns, so
+    MACs / SRAM traffic / controller cycles scale by the tail fraction.
+    The GAP+FC row is unchanged (it runs in full every decision)."""
+    base = kws.layer_stats(cfg)
+    out = []
+    for i, s in enumerate(base):
+        if i >= cfg.num_conv_layers:        # gap+fc row
+            out.append(dict(s))
+            continue
+        lg = geom.layers[i]
+        frac = (lg.t_conv - lg.conv_lo) / lg.t_conv
+        cin = 1 if i == 0 else cfg.channels[i - 1]
+        out.append({
+            **s,
+            "macs": int(round(s["macs"] * frac)),
+            "in_bits": int(lg.tail_in * cin * (8 if i == 0 else 1)),
+            "out_bits": int(lg.d_out * cfg.channels[i]),
+            "cycles": int(round(s["cycles"] * frac)),
+        })
+    return out

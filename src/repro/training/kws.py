@@ -144,11 +144,12 @@ def evaluate(params, state, x: np.ndarray, y: np.ndarray,
     return correct / len(y)
 
 
-def evaluate_hw(hw: kws.HWParams, x: np.ndarray, y: np.ndarray,
+def evaluate_hw(hw, x: np.ndarray, y: np.ndarray,
                 cfg: kws.KWSConfig = kws.PAPER_KWS,
                 chip_offsets=None, sa_noise_std: float = 0.0,
                 seed: int = 0, batch: int = 200,
                 use_kernel: bool = False) -> float:
+    """Hardware-path accuracy; ``hw`` is HWParams or PackedHWParams."""
     fwd = jax.jit(lambda xb, k: kws.hw_forward(
         hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
         rng=k, use_kernel=use_kernel)[0])
@@ -161,15 +162,16 @@ def evaluate_hw(hw: kws.HWParams, x: np.ndarray, y: np.ndarray,
     return correct / len(y)
 
 
-def hw_features(hw: kws.HWParams, x: np.ndarray,
+def hw_features(hw, x: np.ndarray,
                 cfg: kws.KWSConfig = kws.PAPER_KWS,
                 chip_offsets=None, sa_noise_std: float = 0.0,
-                seed: int = 0, batch: int = 200) -> np.ndarray:
+                seed: int = 0, batch: int = 200,
+                use_kernel: bool = False) -> np.ndarray:
     """GAP features through the hardware path — the customization feature
     buffer (§V-C stores these in SRAM for reuse across epochs)."""
     fwd = jax.jit(lambda xb, k: kws.hw_forward(
         hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
-        rng=k)[1])
+        rng=k, use_kernel=use_kernel)[1])
     outs, key = [], jax.random.PRNGKey(seed)
     for i in range(0, len(x), batch):
         key, sub = jax.random.split(key)
@@ -177,12 +179,12 @@ def hw_features(hw: kws.HWParams, x: np.ndarray,
     return np.concatenate(outs, axis=0)
 
 
-def calibrate_and_compensate(hw: kws.HWParams, xcal: np.ndarray,
+def calibrate_and_compensate(hw, xcal: np.ndarray,
                              chip_offsets: Dict[str, jax.Array],
                              cfg: kws.KWSConfig = kws.PAPER_KWS,
                              macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
                              sa_noise_std: float = 1.0,
-                             seed: int = 0) -> kws.HWParams:
+                             seed: int = 0):
     """Paper §IV-B: estimate per-channel MAV offsets via the chip's TEST
     MODE (Fig 8) and fold the compensation into the in-memory BN biases.
 
@@ -192,7 +194,11 @@ def calibrate_and_compensate(hw: kws.HWParams, xcal: np.ndarray,
     inputs and the per-channel estimate degenerates: est err ~6 counts for
     offset std 8 in our ablation).  We simulate exactly that measurement:
     ideal counts + the chip's static offset + fresh SA noise per read,
-    averaged over the calibration patterns."""
+    averaged over the calibration patterns.
+
+    Accepts HWParams or PackedHWParams and returns the same kind (the
+    compensated biases are re-packed — reprogramming the bias word lines)."""
+    hw, was_packed = kws.as_hw_params(hw)
     xc = jnp.asarray(xcal)
 
     @jax.jit
@@ -213,4 +219,5 @@ def calibrate_and_compensate(hw: kws.HWParams, xcal: np.ndarray,
                                                     measured)
         new_bias[name] = compensation.compensate_bias(hw.bias[name], est,
                                                       macro)
-    return hw._replace(bias=new_bias)
+    out = hw._replace(bias=new_bias)
+    return kws.pack_hw_params(out, cfg) if was_packed is not None else out

@@ -124,6 +124,9 @@ def test_hw_forward_one_pallas_call_per_imc_layer(monkeypatch):
         calls.append(kwargs.get("grid"))
         return real(*args, **kwargs)
 
+    # fresh jit caches: other tests (e.g. streaming tails) may already have
+    # traced same-shaped kernel calls, which would hide their pallas_call
+    jax.clear_caches()
     monkeypatch.setattr(pl, "pallas_call", counting)
     # unique sample_len => fresh shapes => every layer retraces under jit
     cfg = m.KWSConfig(sample_len=616)

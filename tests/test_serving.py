@@ -1,0 +1,390 @@
+"""The streaming serving contract (repro.serving):
+
+* N hops of the frame-incremental path are bit-identical to per-window
+  ``hw_forward`` — clean, chip-offset and SA-noise configurations (the
+  noise comes from the per-absolute-column field; the offline window
+  evaluates the same field via ``hw_forward(sa_noise=...)``);
+* the GAP ring and every layer carry survive full wraparound;
+* the ``streaming=False`` fallback recomputes exactly ``hw_forward``;
+* the scheduler batches every ready slot into ONE fused-kernel launch per
+  IMC layer, admits/evicts under randomized arrival, and each stream's
+  decisions match a dedicated single-stream engine bit-for-bit;
+* the decision head smooths, fires once (hysteresis) and respects the
+  refractory window.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+from jax.experimental import pallas as pl
+
+from repro.core import imc
+from repro.models import kws as m
+from repro.serving import (DecisionConfig, StreamEngine, StreamServer,
+                           decision_init, decision_step, hop_alignment,
+                           make_stream_geometry, streaming_layer_stats,
+                           window_sa_noise)
+from repro.serving import stream as sv
+
+L, HOP = 640, 64
+CFG = m.KWSConfig(sample_len=L)
+
+
+@pytest.fixture(scope="module")
+def folded():
+    params = m.init_params(jax.random.PRNGKey(5), CFG)
+    state = m.init_state(CFG)
+    return m.fold_params(params, state, CFG, pack=True)
+
+
+def _audio(key, n, batch=1):
+    return jax.random.uniform(jax.random.PRNGKey(key), (batch, n),
+                              minval=-1, maxval=1)
+
+
+def _chip(std=4.0):
+    chans = {f"conv{i}": CFG.channels[i]
+             for i in range(1, CFG.num_conv_layers)}
+    return imc.sample_chip_offsets(
+        jax.random.PRNGKey(9), chans,
+        imc.IMCNoiseParams(mav_offset_std=std))
+
+
+# ---------------------------------------------------------------------------
+# Geometry
+# ---------------------------------------------------------------------------
+
+
+def test_geometry_alignment_and_shapes():
+    assert hop_alignment(CFG) == 64
+    geom = make_stream_geometry(CFG, HOP)
+    t_in, d_in = L, HOP
+    for i, lg in enumerate(geom.layers):
+        k, s, p = CFG.kernels[i], CFG.strides[i], CFG.pools[i]
+        assert lg.t_in == t_in and lg.d_in == d_in
+        assert lg.t_conv == (t_in - k) // s + 1
+        assert lg.t_out == lg.t_conv // p
+        assert lg.carry == lg.tail_in - lg.d_in
+        # the tail's conv start is pool-aligned in the full window
+        assert lg.conv_lo % p == 0
+        # conv over the tail produces exactly the fresh (+re-pooled) columns
+        assert (lg.tail_in - k) // s + 1 == lg.t_conv - lg.conv_lo
+        t_in, d_in = lg.t_out, lg.d_out
+    with pytest.raises(ValueError):
+        make_stream_geometry(CFG, HOP + 1)       # misaligned hop
+    with pytest.raises(ValueError):
+        make_stream_geometry(CFG, L)             # hop >= window
+
+
+def test_streaming_macs_fraction():
+    geom = make_stream_geometry(CFG, HOP)
+    off = m.layer_stats(CFG)
+    strm = streaming_layer_stats(CFG, geom)
+    assert len(off) == len(strm)
+    ratio = sum(s["macs"] for s in strm) / sum(s["macs"] for s in off)
+    # per-decision work collapses toward hop/window (0.1), plus carries
+    assert ratio < 0.3
+    assert strm[-1] == off[-1]                   # gap+fc runs in full
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness vs offline hw_forward (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+@pytest.mark.parametrize("noisy", [False, True], ids=["clean", "noise"])
+def test_streaming_bitexact_vs_offline_hops(folded, noisy):
+    """Every hop's logits == hw_forward on that full window, across enough
+    hops (10) to fully wrap the GAP ring (t_feat=7) and every layer carry.
+    Streaming runs the fused kernels; the offline oracle runs the jnp path,
+    so this also crosses the kernel/jnp boundary."""
+    hw = folded
+    geom = make_stream_geometry(CFG, HOP)
+    n_hops = 10
+    audio = _audio(1, L + n_hops * HOP)
+    keys = jax.random.PRNGKey(42)[None]
+    offs = _chip() if noisy else None
+    std = 1.2 if noisy else 0.0
+
+    logits, state = sv.stream_init(hw, audio[:, :L], keys, CFG, geom,
+                                   chip_offsets=offs, sa_noise_std=std,
+                                   use_kernel=True)
+    for t in range(n_hops + 1):
+        if t > 0:
+            chunk = audio[:, L + (t - 1) * HOP:L + t * HOP]
+            logits, state = sv.stream_step(hw, state, chunk, CFG, geom,
+                                           chip_offsets=offs,
+                                           sa_noise_std=std,
+                                           use_kernel=True)
+        window = audio[:, t * HOP:t * HOP + L]
+        noise = (window_sa_noise(keys[0], CFG, geom, t, std)
+                 if noisy else None)
+        ref, _ = m.hw_forward(hw, window, CFG, chip_offsets=offs,
+                              sa_noise=noise, sa_noise_std=std,
+                              use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref),
+                                      err_msg=f"hop {t}")
+    assert int(state.hop[0]) == n_hops + 1
+    if noisy:
+        # the noise actually flips decisions relative to the clean path
+        clean, _ = m.hw_forward(hw, audio[:, :L], CFG, use_kernel=False)
+        noisy0, _ = m.hw_forward(hw, audio[:, :L], CFG, chip_offsets=offs,
+                                 sa_noise=window_sa_noise(keys[0], CFG,
+                                                          geom, 0, std),
+                                 sa_noise_std=std, use_kernel=False)
+        assert not np.array_equal(np.asarray(clean), np.asarray(noisy0))
+
+
+@pytest.mark.streaming
+def test_streaming_jnp_and_kernel_paths_agree(folded):
+    """use_kernel=False streaming == use_kernel=True streaming, batched."""
+    hw = folded
+    geom = make_stream_geometry(CFG, HOP)
+    audio = _audio(2, L + 3 * HOP, batch=2)
+    keys = jnp.stack([jax.random.PRNGKey(1), jax.random.PRNGKey(2)])
+    outs = []
+    for uk in (False, True):
+        logits, state = sv.stream_init(hw, audio[:, :L], keys, CFG, geom,
+                                       sa_noise_std=0.8, use_kernel=uk)
+        acc = [np.asarray(logits)]
+        for t in range(1, 4):
+            chunk = audio[:, L + (t - 1) * HOP:L + t * HOP]
+            logits, state = sv.stream_step(hw, state, chunk, CFG, geom,
+                                           sa_noise_std=0.8, use_kernel=uk)
+            acc.append(np.asarray(logits))
+        outs.append(np.stack(acc))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_recompute_fallback_is_hw_forward(folded):
+    """streaming=False: every hop is exactly hw_forward on the window."""
+    hw = folded
+    eng = StreamEngine(hw, CFG, HOP, use_kernel=False, streaming=False)
+    audio = _audio(3, L + 2 * HOP)
+    keys = jax.random.PRNGKey(7)[None]
+    logits, state = eng.init(audio[:, :L], keys)
+    ref, _ = m.hw_forward(hw, audio[:, :L], CFG, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+    for t in (1, 2):
+        logits, state = eng.step(
+            state, audio[:, L + (t - 1) * HOP:L + t * HOP])
+        ref, _ = m.hw_forward(hw, audio[:, t * HOP:t * HOP + L], CFG,
+                              use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# PackedHWParams: fold-time packing off the per-decision path
+# ---------------------------------------------------------------------------
+
+
+def test_packed_hw_params_no_repacking(folded, monkeypatch):
+    """With PackedHWParams, hw_forward(use_kernel=True) never repacks the
+    weights — pack_grouped_weights runs at fold time only."""
+    hw = folded
+    assert isinstance(hw, m.PackedHWParams)
+    x = _audio(4, L)
+    calls = []
+    real = imc.pack_grouped_weights
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(imc, "pack_grouped_weights", counting)
+    _, f_packed = m.hw_forward(hw, x, CFG, use_kernel=True)
+    assert not calls, "packed path must not repack weights per decision"
+    _, f_raw = m.hw_forward(hw.hw, x, CFG, use_kernel=True)
+    assert len(calls) == CFG.num_conv_layers - 1
+    np.testing.assert_array_equal(np.asarray(f_packed), np.asarray(f_raw))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: batching, admit/evict, per-stream correctness
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_one_fused_launch_per_layer(folded, monkeypatch):
+    """A batched hop over 4 concurrent streams traces exactly one
+    pallas_call per IMC layer — the slot batch shares each launch."""
+    hw = folded
+    srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        srv.submit(f"s{i}", rng.uniform(-1, 1, L + 3 * HOP)
+                   .astype(np.float32))
+    srv.step()                                   # admissions (init path)
+    # drop jit caches so the batched-hop trace re-runs every kernel wrapper
+    # (the B=1 admission traces can otherwise shadow same-shaped tail calls)
+    jax.clear_caches()
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    events = srv.step()                          # first batched hop: traces
+    assert len(events) == 4
+    assert len(calls) == CFG.num_conv_layers - 1
+
+
+def test_scheduler_matches_single_stream_engine(folded):
+    """Streams interleaved through the shared slots produce bit-identical
+    decisions to a dedicated engine per stream (same per-stream keys)."""
+    hw = folded
+    seed = 3
+    srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                       sa_noise_std=0.9, seed=seed,
+                       decision=DecisionConfig(smooth=3, threshold_on=0.4,
+                                               threshold_off=0.3,
+                                               refractory=2))
+    rng = np.random.default_rng(1)
+    lens = [L + 4 * HOP, L + 2 * HOP, L + 3 * HOP]
+    streams = {f"s{i}": rng.uniform(-1, 1, n).astype(np.float32)
+               for i, n in enumerate(lens)}
+    cursors = {k: 0 for k in streams}
+    events = []
+    while (any(cursors[k] < len(v) for k, v in streams.items())
+           or srv.active_streams()):
+        for k, v in streams.items():
+            if cursors[k] < len(v):
+                n = int(rng.integers(40, 500))
+                srv.submit(k, v[cursors[k]:cursors[k] + n])
+                cursors[k] += n
+                if cursors[k] >= len(v):
+                    srv.finish(k)
+        events.extend(srv.step())
+    events.extend(srv.drain())
+
+    eng = StreamEngine(hw, CFG, HOP, use_kernel=False, sa_noise_std=0.9)
+    base = jax.random.PRNGKey(seed)
+    for uid, (k, v) in enumerate(streams.items()):
+        n_hops = (len(v) - L) // HOP + 1
+        key = jax.random.fold_in(base, uid)[None]
+        logits, s0 = eng.init(jnp.asarray(v[None, :L]), key)
+        ref_logits = [np.asarray(logits[0])]
+        for t in range(1, n_hops):
+            logits, s0 = eng.step(
+                s0, jnp.asarray(v[None, L + (t - 1) * HOP:L + t * HOP]))
+            ref_logits.append(np.asarray(logits[0]))
+        # decisions: replay the head over the reference logits
+        dstate = decision_init(1, CFG.num_classes, srv.dcfg)
+        got = sorted((e for e in events if e["stream"] == k),
+                     key=lambda e: e["hop"])
+        assert [e["hop"] for e in got] == list(range(n_hops))
+        for t, ev in enumerate(got):
+            dstate, out = decision_step(srv.dcfg, dstate,
+                                        jnp.asarray(ref_logits[t][None]))
+            assert ev["keyword"] == int(out.keyword[0])
+            assert ev["trigger"] == bool(out.trigger[0])
+            # logits are bit-exact (asserted via keyword/trigger); the
+            # smoothed score may differ by float-fusion ulps under jit
+            np.testing.assert_allclose(np.float32(ev["score"]),
+                                       np.asarray(out.score[0]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.streaming
+@pytest.mark.slow
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000))
+def test_scheduler_soak_randomized_admit_evict(seed):
+    """Soak: more streams than slots, random chunk sizes and arrival order,
+    mid-stream evictions.  Invariants: every surviving stream gets exactly
+    (len - window)//hop + 1 decisions, slots never exceed capacity, evicted
+    slots are reused."""
+    params = m.init_params(jax.random.PRNGKey(5), CFG)
+    state = m.init_state(CFG)
+    hw = m.fold_params(params, state, CFG, pack=True)
+    rng = np.random.default_rng(seed)
+    srv = StreamServer(hw, CFG, hop=HOP, slots=3, use_kernel=True)
+    n_streams = 6
+    streams = {f"s{i}": rng.uniform(-1, 1, L + int(rng.integers(1, 6)) * HOP)
+               .astype(np.float32) for i in range(n_streams)}
+    evict_at = {f"s{rng.integers(0, n_streams)}": 2}
+    cursors = {k: 0 for k in streams}
+    evicted = set()
+    events = []
+    for step_i in range(200):
+        for k, v in streams.items():
+            if k in evicted or cursors[k] >= len(v):
+                continue
+            n = int(rng.integers(30, 600))
+            srv.submit(k, v[cursors[k]:cursors[k] + n])
+            cursors[k] += n
+            if cursors[k] >= len(v):
+                srv.finish(k)
+        assert len(srv.active_streams()) <= 3
+        events.extend(srv.step())
+        for k, at in evict_at.items():
+            if step_i == at and k not in evicted:
+                srv.evict(k)
+                evicted.add(k)
+        if (all(cursors[k] >= len(v) for k, v in streams.items())
+                and not srv.active_streams()):
+            break
+    events.extend(srv.drain())
+    assert not srv.active_streams()
+    by_stream = {}
+    for e in events:
+        by_stream.setdefault(e["stream"], []).append(e)
+    for k, v in streams.items():
+        expect = (len(v) - L) // HOP + 1
+        got = len(by_stream.get(k, []))
+        if k in evicted:
+            assert got <= expect
+        else:
+            assert got == expect, (k, got, expect)
+
+
+# ---------------------------------------------------------------------------
+# Decision head
+# ---------------------------------------------------------------------------
+
+
+def test_decision_smoothing_hysteresis_refractory():
+    dcfg = DecisionConfig(smooth=3, threshold_on=0.6, threshold_off=0.4,
+                          refractory=4, background_class=1)
+    state = decision_init(1, 4, dcfg)
+    hot = jnp.asarray([[8.0, 0.0, 0.0, 0.0]])
+    cold = jnp.asarray([[0.0, 8.0, 0.0, 0.0]])
+
+    # hop 0: one hot posterior, smoothing divides by hops seen (1) -> fires
+    state, out = decision_step(dcfg, state, hot)
+    assert bool(out.trigger[0]) and int(out.keyword[0]) == 0
+    # held-down key: score stays high but hysteresis blocks a second fire
+    for _ in range(3):
+        state, out = decision_step(dcfg, state, hot)
+        assert not bool(out.trigger[0])
+    # release below threshold_off -> re-arms; refractory also expires
+    for _ in range(3):
+        state, out = decision_step(dcfg, state, cold)
+        assert not bool(out.trigger[0])
+    state, out = decision_step(dcfg, state, hot)
+    assert not bool(out.trigger[0])       # smoothed over 3 hops: not yet
+    state, out = decision_step(dcfg, state, hot)
+    assert bool(out.trigger[0])           # 2/3 hot hops clears 0.6
+
+    # refractory: immediately re-armed + hot cannot fire for 4 hops
+    state, out = decision_step(dcfg, state, cold)
+    state, out = decision_step(dcfg, state, cold)  # re-armed now
+    state, out = decision_step(dcfg, state, hot)
+    state, out = decision_step(dcfg, state, hot)
+    assert not bool(out.trigger[0])       # refractory still counting down
+
+
+def test_decision_mask_freezes_inactive_streams():
+    dcfg = DecisionConfig(smooth=2, threshold_on=0.6, threshold_off=0.4,
+                          refractory=1)
+    state = decision_init(2, 3, dcfg)
+    hot = jnp.asarray([[9.0, 0.0, 0.0], [9.0, 0.0, 0.0]])
+    mask = jnp.asarray([True, False])
+    state, out = decision_step(dcfg, state, hot, active=mask)
+    assert bool(out.trigger[0]) and not bool(out.trigger[1])
+    assert int(state.seen[0]) == 1 and int(state.seen[1]) == 0
+    np.testing.assert_array_equal(np.asarray(state.posteriors[1]), 0.0)
