@@ -14,8 +14,10 @@ Run:  PYTHONPATH=src python -m benchmarks.run
            record to results/BENCH_imc_fused.json)
       PYTHONPATH=src python -m benchmarks.run --streaming
           (always-on serving: frame-incremental streaming vs full-window
-           recompute, >=4 batched streams; writes decisions/sec, MACs and
-           uJ/decision to results/BENCH_streaming.json)
+           recompute, >=4 batched streams, plus the voice-activity-gated
+           path on a --duty speech/silence mixture; writes decisions/sec,
+           MACs and the duty-cycled uJ/decision to
+           results/BENCH_streaming.json)
 """
 
 from __future__ import annotations
@@ -348,21 +350,26 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
 
 def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
                     hop: int = 256, slots: int = 4, hops: int = 6,
-                    use_kernel: bool = True) -> dict:
+                    use_kernel: bool = True, duty: float = 0.2) -> dict:
     """Always-on serving benchmark: ``slots`` concurrent streams batched
     through the StreamServer, frame-incremental (streaming) vs full-window
-    recompute per hop.  Records decisions/sec, per-decision MAC counts and
-    the analytical uJ/decision for both paths into BENCH_streaming.json.
+    recompute per hop, plus the voice-activity-gated path on a
+    speech/silence mixture at ``duty`` speech duty cycle.  Records
+    decisions/sec, per-decision MAC counts, the analytical uJ/decision for
+    both ungated paths and the duty-cycled gated uJ/decision (the
+    always-on power story: gated hops charge leakage + VAD only) into
+    BENCH_streaming.json.
 
-    Timing protocol: both servers are stepped once past admission and once
-    past the jit trace, then ``hops`` steady-state batched hops are timed.
-    """
+    Timing protocol: servers are stepped once past admission and once past
+    the jit trace, then ``hops`` steady-state batched hops are timed; the
+    gated run times the whole mixture drain instead (its per-step work is
+    intentionally non-uniform)."""
     import jax
     import numpy as np_
     from repro.core import energy
     from repro.kernels import default_interpret
     from repro.models import kws as m
-    from repro.serving import StreamServer, streaming_layer_stats
+    from repro.serving import StreamServer, VADConfig, streaming_layer_stats
 
     cfg = m.KWSConfig(sample_len=sample_len)
     params = m.init_params(jax.random.PRNGKey(0), cfg)
@@ -395,6 +402,43 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
             "decisions_per_sec": round(n / dt, 2),
         }
 
+    def run_gated() -> dict:
+        """Speech/silence mixture: each stream is loud for the first
+        ``duty`` fraction of its post-window hops (one utterance burst)
+        and near-silent after; the VAD gates the silent tail so only
+        ~duty of the hops run the IMC stack."""
+        n_hops = max(hops * 4, 20)         # long tail: duty dominates
+        n_speech = max(1, round(duty * n_hops))
+        mix = {}
+        for i in range(slots):
+            wav = (1e-4 * rng.standard_normal(sample_len + n_hops * hop)
+                   ).astype(np_.float32)
+            loud = sample_len + n_speech * hop
+            wav[:loud] = rng.uniform(-1, 1, size=loud)
+            mix[f"g{i}"] = wav
+        srv = StreamServer(hw, cfg, hop=hop, slots=slots,
+                           use_kernel=use_kernel,
+                           vad=VADConfig(threshold_on_db=-40.0,
+                                         threshold_off_db=-50.0,
+                                         wake_margin=1, hang=0))
+        for sid, audio in mix.items():
+            srv.submit(sid, audio)
+            srv.finish(sid)
+        t0 = time.perf_counter()
+        n = len(srv.drain())
+        dt = time.perf_counter() - t0
+        s = srv.stats()
+        return {
+            "hops_per_stream": n_hops,
+            "duty_cycle_target": duty,
+            "duty_cycle_measured": s["duty_cycle"],
+            "speech_hops": s["speech_hops"],
+            "gated_hops": s["gated_hops"],
+            "decisions": n,
+            "wall_s": round(dt, 4),
+            "decisions_per_sec": round(n / dt, 2),
+        }
+
     from repro.models.kws import layer_stats
     from repro.serving import make_stream_geometry
     geom = make_stream_geometry(cfg, hop)
@@ -405,6 +449,19 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
 
     res_stream = run(streaming=True)
     res_recomp = run(streaming=False)
+    res_gated = run_gated()
+    # charge the energy at the duty cycle the run actually measured (the
+    # VAD's hangover/EMA tail makes it slightly above the target), so the
+    # recorded reduction describes the attached run
+    measured_duty = res_gated["duty_cycle_measured"]
+    gated_energy = {
+        k: round(v, 4) if isinstance(v, float) else v
+        for k, v in energy.gated_energy_summary(
+            stats_off, stats_str, hop_samples=hop,
+            duty_cycle=measured_duty if measured_duty is not None
+            else duty).items()
+    }
+    res_gated["energy"] = gated_energy
     speedup = (res_stream["decisions_per_sec"]
                / res_recomp["decisions_per_sec"])
     report = {
@@ -418,6 +475,7 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
         "timed_hops": hops,
         "streaming": res_stream,
         "recompute": res_recomp,
+        "gated": res_gated,
         "speedup_decisions_per_sec": round(speedup, 3),
         "macs_per_decision": {
             "offline": macs_off,
@@ -435,6 +493,11 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
          f"recompute_us={res_recomp['us_per_decision']:.0f};"
          f"x{speedup:.2f};slots={slots};hop/window={hop / sample_len:.3f}")
     _row("streaming_macs_ratio", "", f"{macs_str / macs_off:.4f}")
+    _row("streaming_gated_uj_per_decision", "",
+         f"{gated_energy['gated_uj_per_decision']:.3f}uJ"
+         f"@duty{gated_energy['duty_cycle']:.2f};"
+         f"ungated={gated_energy['ungated_uj_per_decision']:.3f}uJ;"
+         f"x{gated_energy['reduction_vs_ungated']:.2f}")
 
     if out_path is None:
         out_path = os.path.normpath(os.path.join(RESULTS,
@@ -474,6 +537,9 @@ def main(argv=None) -> None:
                     help="--streaming concurrent streams (default 4)")
     ap.add_argument("--stream-hops", type=int, default=6,
                     help="--streaming timed hops per stream (default 6)")
+    ap.add_argument("--duty", type=float, default=0.2,
+                    help="--streaming speech duty cycle of the gated "
+                         "mixture (default 0.2)")
     args = ap.parse_args(argv)
     if args.imc_fused and args.streaming:
         ap.error("--imc-fused and --streaming are separate runs; pick one")
@@ -482,9 +548,10 @@ def main(argv=None) -> None:
         ap.error("--imc-fused-out/--batches only apply with --imc-fused")
     if not args.streaming and (args.streaming_out is not None
                                or args.hop != 256 or args.stream_slots != 4
-                               or args.stream_hops != 6):
-        ap.error("--streaming-out/--hop/--stream-slots/--stream-hops only "
-                 "apply with --streaming")
+                               or args.stream_hops != 6
+                               or args.duty != 0.2):
+        ap.error("--streaming-out/--hop/--stream-slots/--stream-hops/"
+                 "--duty only apply with --streaming")
     if args.sample_len is not None and not (args.imc_fused
                                             or args.streaming):
         ap.error("--sample-len only applies with --imc-fused/--streaming")
@@ -500,7 +567,7 @@ def main(argv=None) -> None:
         streaming_bench(args.streaming_out,
                         sample_len=args.sample_len or 2_000,
                         hop=args.hop, slots=args.stream_slots,
-                        hops=args.stream_hops)
+                        hops=args.stream_hops, duty=args.duty)
         return
     table2_model()
     table3_hw_constraints()

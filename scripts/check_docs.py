@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Docs consistency gate: fail CI if README.md or docs/*.md reference
+repo files, modules or CLI flags that do not exist.
+
+Checked reference forms (inside backticks only — prose is free):
+
+* path-like tokens whose first segment is a top-level repo directory
+  (``src/...``, ``tests/...``) or that end in a known code/data extension
+  — must exist on disk (trailing ``:line`` / ``::member`` suffixes are
+  stripped);
+* dotted module tokens ``repro.foo[.bar...]`` — ``src/repro/foo`` must
+  exist as a package or module (deeper components may be attributes, so
+  only the first level under ``repro`` is resolved);
+* ``--flag`` tokens — the literal flag string must appear in some .py or
+  .sh file under the repo (catches renamed/removed CLI options).
+
+Run:  python scripts/check_docs.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOP_DIRS = {"src", "tests", "scripts", "benchmarks", "examples", "docs",
+            "results"}
+EXTS = (".py", ".sh", ".md", ".json", ".ini", ".pkl")
+
+
+def doc_files():
+    out = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        out += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                if f.endswith(".md")]
+    return [p for p in out if os.path.exists(p)]
+
+
+def repo_sources():
+    srcs = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if not d.startswith(".")]
+        for f in filenames:
+            if f.endswith((".py", ".sh")):
+                srcs.append(os.path.join(dirpath, f))
+    return srcs
+
+
+def extract_tokens(text):
+    """(paths, modules, flags) referenced in backtick spans."""
+    paths, modules, flags = set(), set(), set()
+    for span in re.findall(r"`([^`\n]+)`", text):
+        for word in span.split():
+            word = word.strip(",;:()[]{}\"'")
+            if word.startswith("--") and re.fullmatch(r"--[\w-]+", word):
+                flags.add(word)
+                continue
+            word = word.split("::")[0]
+            word = re.sub(r":\d+(-\d+)?$", "", word)
+            if re.fullmatch(r"repro(\.[A-Za-z_]\w*)+", word):
+                modules.add(word)
+            elif "/" in word and not word.startswith(("http:", "https:")):
+                first = word.split("/")[0]
+                if first in TOP_DIRS or word.endswith(EXTS):
+                    paths.add(word.rstrip("/"))
+    return paths, modules, flags
+
+
+def main() -> int:
+    missing = []
+    flag_corpus = None
+    for doc in doc_files():
+        rel = os.path.relpath(doc, ROOT)
+        with open(doc) as f:
+            text = f.read()
+        paths, modules, flags = extract_tokens(text)
+        for p in sorted(paths):
+            if not os.path.exists(os.path.join(ROOT, p)):
+                missing.append(f"{rel}: path `{p}` does not exist")
+        for mod in sorted(modules):
+            parts = mod.split(".")
+            base = os.path.join(ROOT, "src", parts[0],
+                                *([parts[1]] if len(parts) > 1 else []))
+            if not (os.path.isdir(base) or os.path.exists(base + ".py")):
+                missing.append(f"{rel}: module `{mod}` not found under src/")
+        if flags:
+            if flag_corpus is None:
+                flag_corpus = "\n".join(
+                    open(s, errors="replace").read()
+                    for s in repo_sources())
+            for fl in sorted(flags):
+                if fl not in flag_corpus:
+                    missing.append(
+                        f"{rel}: flag `{fl}` not found in any .py/.sh")
+    if missing:
+        print("docs check FAILED:")
+        for line in missing:
+            print(f"  {line}")
+        return 1
+    print(f"docs check OK ({len(doc_files())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,21 +1,33 @@
 #!/usr/bin/env bash
-# CI gate: the tier-1 quick pass plus the streaming-equivalence contract.
+# CI gate: the tier-1 quick pass plus the streaming-equivalence and
+# gating-equivalence contracts and the docs consistency check.
 #
 #   scripts/ci.sh            quick: everything but slow/streaming-marked
 #                            tests, then the streaming bit-exactness tests
+#                            (incl. the VAD-gating equivalence + wake-margin
+#                            replay gates), then the docs check
 #   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
+#                            plus the docs check
 #
-# The `streaming` marker (pytest.ini) tags the serving equivalence tests
-# and the long multi-stream soak: the quick pass deselects them wholesale,
-# then re-runs the equivalence subset explicitly (the soak stays out — it
-# is also marked `slow`).
+# The `streaming` marker (pytest.ini) tags the serving equivalence tests,
+# the gating/backpressure/dynamic-hop server tests and the long
+# multi-stream soak: the quick pass deselects them wholesale, then re-runs
+# the non-slow subset explicitly (the soak stays out — it is also marked
+# `slow`).  The gating-equivalence gate is the acceptance contract that a
+# VAD forced to "speech" leaves serving bit-identical to ungated
+# streaming, SA noise and chip offsets included.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 if [[ "${1:-}" == "--full" ]]; then
-    exec python -m pytest -x -q
+    python -m pytest -x -q
+    exec python scripts/check_docs.py
 fi
 
 python -m pytest -x -q -m "not slow and not streaming"
 python -m pytest -x -q -m "streaming and not slow" tests/test_serving.py
+# gating-equivalence gate (explicit, so a marker edit can't silently drop it)
+python -m pytest -x -q tests/test_serving.py \
+    -k "gated_forced_speech_bitexact or wake_margin_replays"
+python scripts/check_docs.py

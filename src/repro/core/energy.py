@@ -160,6 +160,67 @@ def streaming_energy_summary(offline_stats: List[dict],
     }
 
 
+def vad_stats(hop_samples: int) -> dict:
+    """Op counts of the always-on VAD front end per hop, same row schema as
+    ``kws.layer_stats``: one 8-bit MAC per sample (square + accumulate of
+    the energy EMA), one SRAM read per buffered sample, one controller
+    cycle per sample, an 8-bit state write.  This is the only digital block
+    awake on a gated (silent) hop."""
+    return {
+        "name": "vad", "kind": "digital",
+        "macs": int(hop_samples),
+        "in_bits": int(hop_samples * 8),
+        "out_bits": 8,
+        "cycles": int(hop_samples),
+    }
+
+
+def gated_energy_summary(offline_stats: List[dict],
+                         streaming_stats: List[dict], *,
+                         hop_samples: int, duty_cycle: float,
+                         freq_hz: float = 1e6) -> dict:
+    """Duty-cycled energy of the voice-activity-gated always-on path.
+
+    Every hop runs the VAD detector (``vad_stats``).  A *speech* hop
+    additionally runs the frame-incremental IMC stack (the streaming
+    report).  A *gated* (silent) hop charges **leakage only** for the
+    VAD's awake cycles plus the VAD's own dynamic energy — the IMC arrays,
+    controller and FC never switch, exactly the chip's sleep story.  The
+    per-decision average weighs the two by ``duty_cycle`` (the fraction of
+    hops with speech); the silent hops' "no keyword" decision is made by
+    the VAD itself, so every hop still counts as a decision.
+
+    Consumed by ``benchmarks/run.py --streaming`` and the StreamServer's
+    ``stats()`` (with the measured duty cycle)."""
+    if not 0.0 <= duty_cycle <= 1.0:
+        raise ValueError(f"duty_cycle={duty_cycle} must be in [0, 1]")
+    strm = kws_streaming_report(streaming_stats, freq_hz)
+    v = vad_stats(hop_samples)
+    vad_dynamic_j = LayerEnergy(
+        name=v["name"], kind=v["kind"], macs=v["macs"],
+        sram_read_bits=v["in_bits"], sram_write_bits=v["out_bits"],
+        ctrl_cycles=v["cycles"]).dynamic_j
+    vad_leak_j = LEAKAGE_W * v["cycles"] / freq_hz
+    idle_j = vad_dynamic_j + vad_leak_j
+    active_j = strm.energy_j_per_decision + idle_j   # VAD runs every hop
+    gated_j = duty_cycle * active_j + (1.0 - duty_cycle) * idle_j
+    base = streaming_energy_summary(offline_stats, streaming_stats, freq_hz)
+    return {
+        "freq_hz": freq_hz,
+        "duty_cycle": duty_cycle,
+        "hop_samples": hop_samples,
+        "offline_uj_per_decision": base["offline_uj_per_decision"],
+        "ungated_uj_per_decision": active_j * 1e6,
+        "idle_uj_per_hop": idle_j * 1e6,
+        "vad_dynamic_uj": vad_dynamic_j * 1e6,
+        "vad_leakage_uj": vad_leak_j * 1e6,
+        "gated_uj_per_decision": gated_j * 1e6,
+        "reduction_vs_ungated": active_j / gated_j,
+        "reduction_vs_offline": (base["offline_uj_per_decision"] * 1e-6
+                                 / gated_j),
+    }
+
+
 def training_energy_j(num_epochs: int, freq_hz: float = 1e6,
                       macs_per_epoch: int = 0, lut_ops: int = 0,
                       div_ops: int = 0, sram_bits: int = 0) -> float:

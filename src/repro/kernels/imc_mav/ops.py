@@ -2,13 +2,30 @@
 boundaries, im2col for the binary group conv, and the (B, T, C) activation
 interface used by repro.models.kws.
 
-``fused_conv_mav`` is the inference hot path: the whole IMC layer (grouped
-binary conv + in-memory BN + SA + channel shuffle + OR-maxpool) in exactly
-one ``pallas_call`` with the group dimension in the kernel grid.
-``fused_conv_mav_step`` is its time-sliced streaming entry (grid restricted
-to a hop's fresh columns — see repro.serving.stream).  The per-group
-``conv_mav`` loop below it is kept as the seed baseline the fused kernel is
-benchmarked against (see benchmarks/run.py::imc_fused_bench).
+**One-launch-per-layer invariant.**  ``fused_conv_mav`` is the inference
+hot path: the whole IMC layer (grouped binary conv + static chip offset +
+in-memory BN bias + SA noise + BN-decoder flip + SA sign + channel shuffle
++ OR-maxpool) in exactly one ``pallas_call``, with the weight packs in the
+kernel grid and the batch in the M tiling — so the launch count of a
+forward (or of a whole fleet of batched streams, see
+repro.serving.scheduler) is one per IMC layer, period.
+``fused_conv_mav_step`` is the time-sliced streaming entry: same packed
+operands, same single launch, but M covers only a hop's carry + fresh
+columns (~hop/window of the full-window work — repro.serving.stream owns
+the geometry).
+
+**Per-absolute-column SA-noise field.**  The ``sa_noise`` operand is an
+explicit pre-pool noise realization, (B, t_conv, C_out).  The streaming
+path evaluates it from a field keyed by
+``fold_in(fold_in(stream_key, layer), absolute_column)``: a column's noise
+sample is a property of its single sense-amplifier evaluation, so it rides
+along with the cached activation across hops, and an offline window that
+evaluates the same field reproduces the streaming output bit-exactly.
+``sa_key``/``sa_noise_std`` is the alternative fresh-draw form used by the
+non-streaming forward; the two are mutually exclusive.
+
+The per-group ``conv_mav`` loop below is kept as the seed baseline the
+fused kernel is benchmarked against (benchmarks/run.py::imc_fused_bench).
 """
 
 from __future__ import annotations

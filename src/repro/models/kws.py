@@ -500,6 +500,34 @@ def hw_forward(hw, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
     return logits, feats
 
 
+def silence_columns(hw, cfg: KWSConfig = PAPER_KWS,
+                    chip_offsets: Optional[Dict[str, jax.Array]] = None
+                    ) -> Dict[str, jax.Array]:
+    """Each conv layer's steady-state response to silent (all-zero) audio:
+    {conv_i: (C_i,)} — the gated-hop fill of the always-on serving path.
+
+    Valid convolutions of a constant input are constant, so on a silent
+    window every activation column of every layer equals a single (C_i,)
+    vector determined by the folded biases (and the chip's static MAV
+    offsets, which shift the zero-input counts and therefore belong in the
+    fill).  SA noise is deliberately excluded: a gated hop never evaluates
+    the sense amplifiers, so the fill is the noiseless response.  Computed
+    once at server construction (``repro.serving.scheduler``); a gated hop
+    then just shifts these vectors into the carries and the GAP ring
+    (``repro.serving.stream.gated_step``) without touching the IMC arrays.
+    """
+    hwp, _ = as_hw_params(hw)
+    h = jnp.zeros((1, cfg.sample_len, 1))
+    out = {}
+    for i in range(cfg.num_conv_layers):
+        off = None
+        if chip_offsets is not None and i > 0:
+            off = chip_offsets[f"conv{i}"]
+        h = hw_conv_layer(hwp, i, h, cfg, chip_offset=off, use_kernel=False)
+        out[f"conv{i}"] = h[0, 0]
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Loss / metrics / layer stats for the energy model
 # ---------------------------------------------------------------------------

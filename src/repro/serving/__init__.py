@@ -3,34 +3,48 @@
 The deployment shape of the paper's accelerator: a sliding decision window
 advanced by a hop, with frame-incremental reuse of every IMC layer's
 activation columns between hops (the per-decision work drops to roughly
-hop/window of a full forward), a smoothed/hysteresis decision head, and a
-slot-based scheduler that batches many live streams into one fused-kernel
-launch per layer.
+hop/window of a full forward), a voice-activity gate in front of the
+compute (silent hops advance state by a no-op fill and are charged
+leakage-only), a smoothed/hysteresis decision head, and a slot-based
+scheduler that batches many live streams into one fused-kernel launch per
+layer with dynamic hop widening and admission control.
 
   stream.py     — hop geometry, per-stream ring state, init/step, the
-                  per-absolute-column SA-noise field, work accounting
+                  per-absolute-column SA-noise field, the gated (no-IMC)
+                  state advance, work accounting
+  vad.py        — log-energy EMA + hysteresis voice-activity detector
   decision.py   — posterior smoothing + hysteresis + refractory triggers
-  scheduler.py  — StreamServer: slots, admission queue, batched hops,
-                  eviction, latency/throughput stats
+  scheduler.py  — StreamServer: slots, admission queue + backpressure,
+                  batched hops, VAD gating + wake replay, dynamic hop,
+                  slot autoscaling, eviction, latency/throughput stats
 
-Bit-exactness contract: N hops of the streaming path equal ``hw_forward``
-on each full window — noise and chip-offset configurations included — and
-``streaming=False`` falls back to exactly that recompute path.
+Bit-exactness contracts: N hops of the streaming path equal ``hw_forward``
+on each full window — noise and chip-offset configurations included;
+``streaming=False`` falls back to exactly that recompute path; and gated
+serving with the VAD forced to "speech" is bit-identical to ungated
+serving (silence never computes, so all-speech audio never gates).
 """
 
 from repro.serving.decision import (DecisionConfig, DecisionOut,
                                     DecisionState, decision_init,
                                     decision_step)
-from repro.serving.scheduler import StreamServer
+from repro.serving.scheduler import (AdmissionConfig, DynamicHopConfig,
+                                     StreamServer)
 from repro.serving.stream import (StreamEngine, StreamGeometry, StreamState,
-                                  hop_alignment, make_stream_geometry,
-                                  sa_noise_columns, stream_init, stream_step,
+                                  gated_step, gated_window_step,
+                                  hop_alignment, hop_sa_noise_fields,
+                                  make_stream_geometry, sa_noise_columns,
+                                  silence_fills, stream_init, stream_step,
                                   streaming_layer_stats, window_sa_noise)
+from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
+                               vad_init, vad_step)
 
 __all__ = [
-    "DecisionConfig", "DecisionOut", "DecisionState", "decision_init",
-    "decision_step", "StreamServer", "StreamEngine", "StreamGeometry",
-    "StreamState", "hop_alignment", "make_stream_geometry",
-    "sa_noise_columns", "stream_init", "stream_step",
-    "streaming_layer_stats", "window_sa_noise",
+    "AdmissionConfig", "DecisionConfig", "DecisionOut", "DecisionState",
+    "DynamicHopConfig", "StreamServer", "StreamEngine", "StreamGeometry",
+    "StreamState", "VADConfig", "VADState", "decision_init",
+    "decision_step", "frame_energy_db", "gated_step", "gated_window_step",
+    "hop_alignment", "hop_sa_noise_fields", "make_stream_geometry",
+    "sa_noise_columns", "silence_fills", "stream_init", "stream_step",
+    "streaming_layer_stats", "vad_init", "vad_step", "window_sa_noise",
 ]

@@ -1,26 +1,68 @@
 """Multi-stream batched scheduler for always-on KWS serving.
 
 Slot-based continuous-batching-light (the KWS analogue of
-``repro.launch.serve``'s decoder slots): a fixed number of stream slots,
-each holding one live audio stream's incremental ``StreamState``.  Every
-``step()`` batches ALL hop-ready slots' fresh frames into one
-``stream_step`` call — i.e. exactly one fused-kernel launch per IMC layer
-for the whole fleet of streams, the M-tiling of the fused kernel amortizing
-the weight-stationary packs across streams.  Slots that are not ready this
-step ride along masked (their state is restored verbatim; their logits are
-ignored), so the launch count is independent of readiness.
+``repro.launch.serve``'s decoder slots): a fixed pool of stream slots,
+each holding one live audio stream's incremental ``StreamState``.
+
+**One-launch-per-layer invariant.**  Every ``step()`` batches ALL
+hop-ready slots' fresh frames into one ``stream_step`` call — i.e. exactly
+one fused ``pallas_call`` per IMC layer for the whole fleet of streams,
+the M-tiling of the fused kernel amortizing the weight-stationary packs
+across streams.  Slots that are not ready this step ride along masked
+(their state is restored verbatim; their logits are ignored), so the
+launch count is independent of readiness.  The only exception is a wake
+replay (below), which issues extra full-stack hops for one slot.
+
+**Voice-activity gating** (``vad=VADConfig(...)``): each hop of each
+stream is first classified speech/silence by the cheap digital energy
+detector (repro.serving.vad).  Silent hops launch NO IMC kernels:
+
+* the last ``wake_margin`` silent hops are *deferred* — buffered host-side
+  with the jax state untouched — so a speech onset replays them through
+  the real IMC path and a keyword straddling the silence->speech edge
+  keeps its prefix (if the silent run never exceeds the margin, the gated
+  decision sequence is bit-identical to ungated streaming);
+* silent hops older than the margin are *gated*: the state advances by a
+  masked no-op column fill (``stream.gated_step`` — each layer's constant
+  silence response shifts into the carries and the GAP ring), charged
+  leakage-only in the energy model
+  (``repro.core.energy.gated_energy_summary``);
+* gated/deferred hops emit no decision events — the VAD's "silence" IS
+  the decision — and the decision head stays frozen (mask-aware).
+
+With ``VADConfig(force="speech")`` every hop computes and the server is
+bit-identical to an ungated one (the CI equivalence gate).
+
+**Dynamic hop** (``dynamic_hop=DynamicHopConfig(...)``): when every
+active slot's smoothed posterior stays below ``calm_score`` for
+``widen_after`` consecutive ticks, the effective hop doubles (up to
+``max_multiplier`` x the base hop — any multiple of
+``hop_alignment(cfg)`` keeps column reuse exact); activity (a hot
+posterior or a VAD wake) snaps it back to the base hop.  A hop change
+rebuilds every live slot's ``StreamState`` from its retained last window
+of consumed audio (the streaming geometry — carry sizes, fresh-column
+counts — is hop-dependent, so states cannot be carried across).
+
+**Admission control / backpressure** (``admission=AdmissionConfig(...)``):
+``submit`` returns ``"rejected"`` (and buffers nothing) once the wait
+queue holds ``max_queue`` streams; a stream whose buffered backlog
+exceeds the ``max_lag_s`` latency SLO is shed — its oldest audio is
+dropped to the low-water mark and it re-initializes from the freshest
+window; the slot pool autoscales between ``min_slots`` and ``max_slots``
+(grow under sustained queue pressure, shrink after sustained idle slots).
 
 Host side, each stream owns a ring buffer of pending samples
 (``submit()`` appends arbitrary-sized chunks); a stream is admitted to a
-free slot immediately, waits buffered in an admission queue otherwise, and
-is evicted when its producer calls ``finish()`` and its buffer drains (or
-explicitly via ``evict()``).  Admission runs the stream's first full window
-(``stream_init``) and scatters the result into the slot.
+free slot immediately, waits in the admission queue otherwise, and is
+evicted when its producer calls ``finish()`` and its buffer drains (or
+explicitly via ``evict()``).  Admission runs the stream's first full
+window (``stream_init``) and scatters the result into the slot.
 
 Per-hop logits flow into the shared decision head
 (repro.serving.decision): smoothing + hysteresis + refractory, batched and
 mask-aware.  ``stats()`` reports per-stream and aggregate decisions/sec,
-hop latency, and the streaming-vs-recompute MAC counts per decision.
+hop latency, duty cycle, shed/reject counts and the gated analytical
+uJ/decision.
 """
 
 from __future__ import annotations
@@ -34,9 +76,67 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import energy
 from repro.models import kws
 from repro.serving import decision as dec
 from repro.serving import stream as sv
+from repro.serving import vad as vd
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicHopConfig:
+    """Widen the hop when nothing interesting is happening.
+
+    A tick is *calm* when no computed hop's smoothed posterior reaches
+    ``calm_score`` (silence-only ticks are calm by construction).  After
+    ``widen_after`` consecutive calm ticks the effective hop doubles,
+    capped at ``max_multiplier`` x the base hop and at what the stream
+    geometry admits; any hot posterior or VAD wake narrows back to the
+    base hop immediately."""
+
+    max_multiplier: int = 4
+    widen_after: int = 6
+    calm_score: float = 0.35
+
+    def __post_init__(self):
+        if self.max_multiplier < 1:
+            raise ValueError("max_multiplier must be >= 1")
+        if self.widen_after < 1:
+            raise ValueError("widen_after must be >= 1")
+
+
+jax.tree_util.register_static(DynamicHopConfig)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission control, latency SLO and slot autoscaling.
+
+    ``max_queue``: streams allowed to wait for a slot; further ``submit``s
+    of new streams return ``"rejected"``.  ``max_lag_s``: per-stream
+    backlog SLO in seconds of audio; a stream over it is shed to the
+    low-water mark (half the SLO, never below one window) and re-admitted
+    from its freshest window.  ``min_slots``/``max_slots`` bound the slot
+    pool (both default to the constructor's ``slots`` — no autoscaling);
+    the pool grows after ``scale_up_after`` consecutive ticks with a
+    non-empty queue and shrinks after ``scale_down_after`` consecutive
+    ticks with idle trailing slots."""
+
+    max_queue: Optional[int] = 8
+    max_lag_s: Optional[float] = None
+    min_slots: Optional[int] = None
+    max_slots: Optional[int] = None
+    scale_up_after: int = 2
+    scale_down_after: int = 6
+
+    def __post_init__(self):
+        if self.max_queue is not None and self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (or None)")
+        if self.scale_up_after < 1 or self.scale_down_after < 1:
+            raise ValueError("scale_up/down_after must be >= 1")
+
+
+jax.tree_util.register_static(AdmissionConfig)
 
 
 @dataclasses.dataclass
@@ -50,6 +150,15 @@ class _Stream:
     hops: int = 0                         # decisions made (incl. window 0)
     triggers: List[dict] = dataclasses.field(default_factory=list)
     wall_s: float = 0.0                   # server time attributed to it
+    recent: np.ndarray = dataclasses.field(     # last consumed window —
+        default_factory=lambda: np.zeros((0,), np.float32))  # hop-retarget
+    #                                       re-init source
+    pending: List[np.ndarray] = dataclasses.field(   # deferred silent hops
+        default_factory=list)                        # (<= wake_margin)
+    silent_run: int = 0                   # consecutive silent hops
+    gated_hops: int = 0                   # fill-advanced (no-compute) hops
+    sheds: int = 0
+    shed_samples: int = 0
 
 
 def _select_state(mask: jax.Array, new, old):
@@ -65,26 +174,52 @@ def _scatter_slot(state, one, slot):
 
 
 class StreamServer:
-    """Admit / batch / decide / evict over a fixed number of stream slots."""
+    """Admit / batch / gate / decide / evict over an autoscaling slot pool."""
 
     def __init__(self, hw, cfg: kws.KWSConfig, *, hop: int, slots: int = 4,
                  chip_offsets: Optional[Dict[str, jax.Array]] = None,
                  sa_noise_std: float = 0.0, use_kernel: bool = True,
                  streaming: bool = True,
                  decision: dec.DecisionConfig = dec.DecisionConfig(),
+                 vad: Optional[vd.VADConfig] = None,
+                 dynamic_hop: Optional[DynamicHopConfig] = None,
+                 admission: Optional[AdmissionConfig] = None,
                  seed: int = 0):
         self.cfg = cfg
-        self.slots = slots
         self.streaming = streaming
-        self.engine = sv.StreamEngine(hw, cfg, hop,
-                                      chip_offsets=chip_offsets,
-                                      sa_noise_std=sa_noise_std,
-                                      use_kernel=use_kernel,
-                                      streaming=streaming)
-        self.geom = self.engine.geom
+        self.base_hop = hop
         self.dcfg = decision
-        self._state = self.engine.zeros_state(slots)
+        self.vcfg = vad
+        self.hcfg = dynamic_hop
+        self.acfg = admission
+        self._hw = hw
+        self._engine_kw = dict(chip_offsets=chip_offsets,
+                               sa_noise_std=sa_noise_std,
+                               use_kernel=use_kernel, streaming=streaming)
+        self.min_slots = slots
+        self.max_slots = slots
+        if admission is not None:
+            if admission.min_slots is not None:
+                self.min_slots = admission.min_slots
+            if admission.max_slots is not None:
+                self.max_slots = admission.max_slots
+            if not (1 <= self.min_slots <= slots <= self.max_slots):
+                raise ValueError(
+                    f"need 1 <= min_slots ({self.min_slots}) <= slots "
+                    f"({slots}) <= max_slots ({self.max_slots})")
+        self.slots = slots
+
+        self._fills = None
+        if vad is not None and streaming:
+            sils = kws.silence_columns(hw, cfg, chip_offsets=chip_offsets)
+            self._fills = sv.silence_fills(cfg, sils)
+
+        self._mult = 1
+        self._mults: Dict[int, dict] = {}
+        bundle = self._bundle(1)
+        self._state = bundle["engine"].zeros_state(slots)
         self._dstate = dec.decision_init(slots, cfg.num_classes, decision)
+        self._vstate = vd.vad_init(slots) if vad is not None else None
         self._slots: List[Optional[_Stream]] = [None] * slots
         self._queue: collections.deque[_Stream] = collections.deque()
         self._streams: Dict[str, _Stream] = {}
@@ -93,24 +228,82 @@ class StreamServer:
         self._steps = 0
         self._hop_wall_s = 0.0
         self._decisions = 0
+        self._speech_hops = 0
+        self._gated_hops = 0
+        self._rejected = 0
+        self._shed_events = 0
+        self._shed_samples = 0
+        self._calm_ticks = 0
+        self._pressure_ticks = 0
+        self._idle_ticks = 0
+        self._hop_retargets = 0
 
-        def hop_masked(state, audio, mask):
-            logits, new_state = self.engine._step(state, audio)
-            return logits, _select_state(mask, new_state, state)
-
-        self._hop = jax.jit(hop_masked)
         self._decide = jax.jit(
             lambda dstate, logits, active: dec.decision_step(
                 self.dcfg, dstate, logits, active))
         self._scatter = jax.jit(_scatter_slot)
+        if vad is not None:
+            vcfg = vad
+            self._vad_fn = jax.jit(
+                lambda vs, audio, active: vd.vad_step(vcfg, vs, audio,
+                                                      active))
+
+    # -- hop-multiplier engine table ----------------------------------------
+
+    def _bundle(self, mult: int) -> dict:
+        """Engine + jitted masked hop/gate functions for one hop multiple."""
+        if mult not in self._mults:
+            eng = sv.StreamEngine(self._hw, self.cfg, self.base_hop * mult,
+                                  **self._engine_kw)
+
+            def hop_masked(state, audio, mask, _step=eng._step):
+                logits, new_state = _step(state, audio)
+                return logits, _select_state(mask, new_state, state)
+
+            if self.streaming:
+                def gate_masked(state, mask, _geom=eng.geom):
+                    new = sv.gated_step(state, self.cfg, _geom, self._fills)
+                    return _select_state(mask, new, state)
+            else:
+                def gate_masked(state, mask, _geom=eng.geom):
+                    new = sv.gated_window_step(state, _geom)
+                    return _select_state(mask, new, state)
+
+            self._mults[mult] = {"engine": eng, "hop": jax.jit(hop_masked),
+                                 "gate": jax.jit(gate_masked)}
+        return self._mults[mult]
+
+    @property
+    def engine(self) -> sv.StreamEngine:
+        return self._bundle(self._mult)["engine"]
+
+    @property
+    def geom(self) -> sv.StreamGeometry:
+        return self.engine.geom
+
+    @property
+    def hop(self) -> int:
+        """Current effective hop (base_hop x dynamic multiplier)."""
+        return self.base_hop * self._mult
+
+    @property
+    def hop_multiplier(self) -> int:
+        return self._mult
 
     # -- stream lifecycle ---------------------------------------------------
 
     def submit(self, stream_id: str, chunk: np.ndarray) -> str:
         """Append audio to a stream (created on first submit).  Returns the
-        stream's placement: 'slot' (live) or 'queued' (awaiting a slot)."""
+        stream's placement: 'slot' (live), 'queued' (awaiting a slot) or
+        'rejected' (admission queue full — nothing was buffered; the
+        caller may retry later)."""
         rec = self._streams.get(stream_id)
         if rec is None:
+            if (self.acfg is not None and self.acfg.max_queue is not None
+                    and all(r is not None for r in self._slots)
+                    and len(self._queue) >= self.acfg.max_queue):
+                self._rejected += 1
+                return "rejected"
             rec = _Stream(stream_id=stream_id, uid=self._uid,
                           buf=np.zeros((0,), np.float32))
             self._uid += 1
@@ -132,6 +325,7 @@ class StreamServer:
         rec = self._streams[stream_id]
         rec.finished = True
         rec.buf = rec.buf[:0]
+        rec.pending = []
         if rec.slot is not None:
             self._free_slot(rec)
         elif rec in self._queue:
@@ -150,6 +344,160 @@ class StreamServer:
                 rec.initialized = False
                 self._slots[s] = rec
 
+    # -- backpressure: latency SLO shedding + slot autoscaling --------------
+
+    def _enforce_slo(self) -> None:
+        """Shed streams whose buffered backlog exceeds the latency SLO:
+        drop the oldest audio down to the low-water mark (half the SLO,
+        never below one window) and re-initialize from the freshest
+        window.  Continuity across the cut is gone anyway, so the state is
+        rebuilt rather than fed stale audio late."""
+        if self.acfg is None or self.acfg.max_lag_s is None:
+            return
+        max_lag = int(self.acfg.max_lag_s * self.cfg.sample_rate)
+        keep = max(self.geom.window, max_lag // 2)
+        for rec in self._streams.values():
+            if rec.finished:
+                continue
+            backlog = sum(map(len, rec.pending)) + len(rec.buf)
+            if backlog <= max_lag:
+                continue
+            total = (np.concatenate(rec.pending + [rec.buf])
+                     if rec.pending else rec.buf)
+            dropped = backlog - keep
+            rec.buf = total[-keep:]
+            rec.pending = []
+            rec.silent_run = 0
+            rec.initialized = False
+            rec.sheds += 1
+            rec.shed_samples += dropped
+            self._shed_events += 1
+            self._shed_samples += dropped
+
+    def _autoscale(self) -> None:
+        if self.acfg is None or self.max_slots <= self.min_slots:
+            return
+        if self._queue and self.slots < self.max_slots:
+            self._idle_ticks = 0
+            self._pressure_ticks += 1
+            if self._pressure_ticks >= self.acfg.scale_up_after:
+                self._resize(min(self.max_slots,
+                                 self.slots + len(self._queue)))
+                self._pressure_ticks = 0
+            return
+        self._pressure_ticks = 0
+        free_tail = 0
+        for rec in reversed(self._slots):
+            if rec is None:
+                free_tail += 1
+            else:
+                break
+        if free_tail and not self._queue and self.slots > self.min_slots:
+            self._idle_ticks += 1
+            if self._idle_ticks >= self.acfg.scale_down_after:
+                self._resize(max(self.min_slots, self.slots - free_tail))
+                self._idle_ticks = 0
+        else:
+            self._idle_ticks = 0
+
+    def _resize(self, n: int) -> None:
+        """Grow (append zero rows) or shrink (crop trailing free slots) the
+        batched state pytrees.  Jitted functions re-trace on the new batch
+        shape automatically."""
+        if n == self.slots:
+            return
+        if n > self.slots:
+            grow = n - self.slots
+
+            def pad(a):
+                return jnp.concatenate(
+                    [a, jnp.zeros((grow,) + a.shape[1:], a.dtype)])
+
+            self._state = jax.tree_util.tree_map(pad, self._state)
+            self._dstate = jax.tree_util.tree_map(pad, self._dstate)
+            if self._vstate is not None:
+                self._vstate = jax.tree_util.tree_map(pad, self._vstate)
+            self._slots.extend([None] * grow)
+        else:
+            assert all(r is None for r in self._slots[n:]), \
+                "only trailing free slots can be cropped"
+            self._state = jax.tree_util.tree_map(lambda a: a[:n],
+                                                 self._state)
+            self._dstate = jax.tree_util.tree_map(lambda a: a[:n],
+                                                  self._dstate)
+            if self._vstate is not None:
+                self._vstate = jax.tree_util.tree_map(lambda a: a[:n],
+                                                      self._vstate)
+            self._slots = self._slots[:n]
+        self.slots = n
+        self._try_admit()
+
+    # -- dynamic hop --------------------------------------------------------
+
+    def _feasible_mult(self, mult: int) -> bool:
+        try:
+            sv.make_stream_geometry(self.cfg, self.base_hop * mult)
+            return True
+        except ValueError:
+            return False
+
+    def _set_mult(self, mult: int) -> None:
+        """Retarget the effective hop.  The streaming geometry (carry
+        sizes, fresh-column counts) is hop-dependent, so every live slot's
+        ``StreamState`` is rebuilt from its retained last window of
+        consumed audio via ``stream_init`` on the new-hop engine; deferred
+        silent hops are pushed back into the buffer for re-consumption at
+        the new hop size.  With SA noise enabled the rebuilt stream's
+        noise field restarts at window 0 (a re-init is a fresh programming
+        of the array), so the bit-exactness contract is scoped to a fixed
+        hop."""
+        if mult == self._mult:
+            return
+        bundle = self._bundle(mult)
+        eng = bundle["engine"]
+        window = self.geom.window
+        new_state = eng.zeros_state(self.slots)
+        for s, rec in enumerate(self._slots):
+            if rec is None or not rec.initialized:
+                continue
+            if rec.pending:
+                rec.buf = np.concatenate(rec.pending + [rec.buf])
+                rec.pending = []
+            rec.silent_run = 0
+            if len(rec.recent) >= window:
+                key = jax.random.fold_in(self._base_key, rec.uid)[None]
+                t0 = time.perf_counter()
+                _, one = eng.init(jnp.asarray(rec.recent[None, -window:]),
+                                  key)
+                new_state = self._scatter(new_state, one, s)
+                dt = time.perf_counter() - t0
+                rec.wall_s += dt
+                self._hop_wall_s += dt
+            else:
+                rec.initialized = False     # re-admit from the buffer
+        self._state = new_state
+        self._mult = mult
+        self._hop_retargets += 1
+
+    def _retarget_hop(self, events: List[dict], woke: bool) -> None:
+        if self.hcfg is None:
+            return
+        max_score = max((e["score"] for e in events), default=0.0)
+        if woke or max_score >= self.hcfg.calm_score:
+            self._calm_ticks = 0
+            if self._mult != 1:
+                self._set_mult(1)
+            return
+        self._calm_ticks += 1
+        if self._calm_ticks >= self.hcfg.widen_after:
+            self._calm_ticks = 0
+            # clamp to the cap so non-power-of-two max_multipliers are
+            # still reachable (any integer multiple of the base hop keeps
+            # hop_alignment, so mult=3 etc. is geometrically fine)
+            nxt = min(self._mult * 2, self.hcfg.max_multiplier)
+            if nxt != self._mult and self._feasible_mult(nxt):
+                self._set_mult(nxt)
+
     # -- the batched hop ----------------------------------------------------
 
     def _admit_ready(self):
@@ -162,69 +510,156 @@ class StreamServer:
         for s, rec in enumerate(self._slots):
             if rec is None or rec.initialized or len(rec.buf) < window:
                 continue
-            first = jnp.asarray(rec.buf[None, :window])
+            first = rec.buf[:window]
             rec.buf = rec.buf[window:]   # the state carries the overlap;
                                          # later hops feed fresh samples only
             key = jax.random.fold_in(self._base_key, rec.uid)[None]
             t0 = time.perf_counter()
-            logits, one = self.engine.init(first, key)
+            logits, one = self.engine.init(jnp.asarray(first[None]), key)
             self._state = self._scatter(self._state, one, s)
             self._dstate = dec.reset_slot(self._dstate, s)
+            if self._vstate is not None:
+                self._vstate = vd.vad_reset_slot(self._vstate, s)
             dt = time.perf_counter() - t0
             rec.wall_s += dt
             # the window-0 decision counts toward throughput, so its time
             # must count too (decisions_per_sec = decisions / hop_wall_s)
             self._hop_wall_s += dt
             rec.initialized = True
-            rec.hops = 1
+            rec.hops += 1
+            rec.recent = first.copy()
+            rec.pending = []
+            rec.silent_run = 0
             init_mask[s] = True
             init_logits[s] = np.asarray(logits[0])
         return init_mask, init_logits
 
     def step(self) -> List[dict]:
-        """One scheduler tick: admissions, then ONE batched hop over every
-        hop-ready slot, then the batched decision update.  Returns this
-        tick's decision events (one per deciding stream)."""
+        """One scheduler tick: SLO shedding, autoscaling, admissions, VAD
+        classification, wake replays, then ONE batched hop over every
+        speech-ready slot and ONE masked no-op fill over every gated slot,
+        then the batched decision update.  Returns this tick's decision
+        events (one per deciding stream; gated hops emit none)."""
+        self._enforce_slo()
+        self._autoscale()
+        bundle = self._bundle(self._mult)
         hop = self.geom.hop
+        window = self.geom.window
         init_mask, init_logits = self._admit_ready()
 
-        hop_mask = np.zeros((self.slots,), bool)
+        ready = np.zeros((self.slots,), bool)
         audio = np.zeros((self.slots, hop), np.float32)
         for s, rec in enumerate(self._slots):
             if (rec is not None and rec.initialized and not init_mask[s]
                     and len(rec.buf) >= hop):
-                hop_mask[s] = True
+                ready[s] = True
                 audio[s] = rec.buf[:hop]
                 rec.buf = rec.buf[hop:]
 
+        if self.vcfg is None:
+            speech = ready.copy()
+        else:
+            self._vstate, sp = self._vad_fn(self._vstate,
+                                            jnp.asarray(audio),
+                                            jnp.asarray(ready))
+            speech = np.asarray(sp) & ready
+
+        compute_mask = np.zeros((self.slots,), bool)
+        fill_mask = np.zeros((self.slots,), bool)
+        replays: List[tuple] = []
+        for s, rec in enumerate(self._slots):
+            if not ready[s]:
+                continue
+            chunk = audio[s]
+            if speech[s]:
+                rec.silent_run = 0
+                if rec.pending:           # wake: replay the deferred hops
+                    replays.append((s, rec.pending + [chunk]))
+                    rec.pending = []
+                else:
+                    compute_mask[s] = True
+            else:
+                rec.silent_run += 1
+                rec.pending.append(chunk)
+                if len(rec.pending) > self.vcfg.wake_margin:
+                    aged = rec.pending.pop(0)
+                    fill_mask[s] = True   # advance by the no-op fill
+                    rec.recent = np.concatenate([rec.recent,
+                                                 aged])[-window:]
+                    rec.gated_hops += 1
+                    self._gated_hops += 1
+
+        events: List[dict] = []
+
+        # wake replays: the deferred silent hops plus the onset hop run the
+        # real IMC path sequentially for this slot (rare; bounded by
+        # wake_margin + 1 launches-per-layer each), so the keyword prefix
+        # the VAD latency would have cut is decided exactly as if ungated
+        for s, chunks in replays:
+            rec = self._slots[s]
+            mask = np.zeros((self.slots,), bool)
+            mask[s] = True
+            mask_j = jnp.asarray(mask)
+            for ch in chunks:
+                a = np.zeros((self.slots, hop), np.float32)
+                a[s] = ch
+                t0 = time.perf_counter()
+                lg, self._state = bundle["hop"](self._state,
+                                                jnp.asarray(a), mask_j)
+                self._dstate, out = self._decide(self._dstate, lg, mask_j)
+                out.score.block_until_ready()
+                dt = time.perf_counter() - t0
+                rec.wall_s += dt
+                self._hop_wall_s += dt
+                self._decisions += 1
+                self._speech_hops += 1
+                rec.recent = np.concatenate([rec.recent, ch])[-window:]
+                rec.hops += 1
+                ev = {"stream": rec.stream_id, "hop": rec.hops - 1,
+                      "keyword": int(out.keyword[s]),
+                      "score": float(out.score[s]),
+                      "trigger": bool(out.trigger[s])}
+                events.append(ev)
+                if ev["trigger"]:
+                    rec.triggers.append(ev)
+
         logits = init_logits
-        if hop_mask.any():
+        if compute_mask.any():
             t0 = time.perf_counter()
-            mask_j = jnp.asarray(hop_mask)
-            hop_logits, self._state = self._hop(self._state,
-                                               jnp.asarray(audio), mask_j)
+            mask_j = jnp.asarray(compute_mask)
+            hop_logits, self._state = bundle["hop"](self._state,
+                                                    jnp.asarray(audio),
+                                                    mask_j)
             hop_logits.block_until_ready()
             dt = time.perf_counter() - t0
             self._hop_wall_s += dt
-            n_active = int(hop_mask.sum())
+            n_active = int(compute_mask.sum())
+            self._speech_hops += n_active
             for s, rec in enumerate(self._slots):
-                if hop_mask[s]:
+                if compute_mask[s]:
                     rec.hops += 1
                     rec.wall_s += dt / n_active
-            logits = np.where(hop_mask[:, None], np.asarray(hop_logits),
+                    rec.recent = np.concatenate([rec.recent,
+                                                 audio[s]])[-window:]
+            logits = np.where(compute_mask[:, None], np.asarray(hop_logits),
                               init_logits)
 
-        active = jnp.asarray(init_mask | hop_mask)
-        events: List[dict] = []
-        if bool(init_mask.any() or hop_mask.any()):
+        if fill_mask.any():
+            t0 = time.perf_counter()
+            self._state = bundle["gate"](self._state, jnp.asarray(fill_mask))
+            jax.block_until_ready(self._state)
+            self._hop_wall_s += time.perf_counter() - t0
+
+        active = jnp.asarray(init_mask | compute_mask)
+        if bool(init_mask.any() or compute_mask.any()):
             self._dstate, out = self._decide(self._dstate,
                                              jnp.asarray(logits), active)
-            self._decisions += int((init_mask | hop_mask).sum())
+            self._decisions += int((init_mask | compute_mask).sum())
             trig = np.asarray(out.trigger)
             kwd = np.asarray(out.keyword)
             score = np.asarray(out.score)
             for s, rec in enumerate(self._slots):
-                if rec is None or not (init_mask[s] or hop_mask[s]):
+                if rec is None or not (init_mask[s] or compute_mask[s]):
                     continue
                 ev = {"stream": rec.stream_id, "hop": rec.hops - 1,
                       "keyword": int(kwd[s]), "score": float(score[s]),
@@ -237,9 +672,10 @@ class StreamServer:
         for rec in list(self._slots):
             if (rec is not None and rec.finished
                     and len(rec.buf) < (hop if rec.initialized
-                                        else self.geom.window)):
+                                        else window)):
                 self._free_slot(rec)
         self._steps += 1
+        self._retarget_hop(events, woke=bool(replays))
         return events
 
     def drain(self, max_steps: int = 10_000) -> List[dict]:
@@ -270,16 +706,32 @@ class StreamServer:
         per_stream = {
             rec.stream_id: {
                 "hops": rec.hops,
+                "gated_hops": rec.gated_hops,
                 "triggers": len(rec.triggers),
+                "sheds": rec.sheds,
                 "wall_s": round(rec.wall_s, 4),
             }
             for rec in self._streams.values()
         }
-        return {
+        total_hops = self._speech_hops + self._gated_hops
+        duty = (self._speech_hops / total_hops) if total_hops else None
+        out = {
             "mode": "streaming" if self.streaming else "recompute",
             "slots": self.slots,
+            "slot_range": [self.min_slots, self.max_slots],
+            "queue_depth": len(self._queue),
+            "rejected_streams": self._rejected,
+            "shed": {"events": self._shed_events,
+                     "samples": self._shed_samples},
             "steps": self._steps,
             "decisions": self._decisions,
+            "base_hop": self.base_hop,
+            "hop": self.hop,
+            "hop_multiplier": self._mult,
+            "hop_retargets": self._hop_retargets,
+            "speech_hops": self._speech_hops,
+            "gated_hops": self._gated_hops,
+            "duty_cycle": round(duty, 4) if duty is not None else None,
             "hop_wall_s": round(self._hop_wall_s, 4),
             "decisions_per_sec": round(
                 self._decisions / self._hop_wall_s, 2)
@@ -291,3 +743,11 @@ class StreamServer:
             },
             "per_stream": per_stream,
         }
+        if self.vcfg is not None:
+            out["gated_energy"] = {
+                k: round(v, 4) if isinstance(v, float) else v
+                for k, v in energy.gated_energy_summary(
+                    offline, streaming, hop_samples=self.hop,
+                    duty_cycle=duty if duty is not None else 1.0).items()
+            }
+        return out

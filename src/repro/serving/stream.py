@@ -16,20 +16,35 @@ every layer.  This module computes each hop incrementally:
   is odd, the one conv column the previous window's OR-maxpool truncated
   (that carry IS the pool ring state: the truncated column is recomputed and
   pooled next hop, exactly as the offline window would);
-* SA noise is drawn from a per-absolute-column field
+* SA noise is drawn from a **per-absolute-column field**
   (``fold_in(fold_in(stream_key, layer), abs_col)``), mirroring the silicon:
   each column is evaluated by the sense amplifier exactly once, and its
-  realization rides along with the cached activation.  Offline windows can
-  evaluate the same field (``window_sa_noise``) and feed it to
-  ``hw_forward(sa_noise=...)``, which is how the streaming path is
-  test-enforced bit-identical to per-window ``hw_forward`` on every hop,
-  noise and chip offsets included.
+  realization rides along with the cached activation.  Column ``a`` of
+  layer ``l`` yields the same (C_out,) realization no matter which hop or
+  which code path evaluates it, so cached columns never need re-noising and
+  offline windows can evaluate the same field (``window_sa_noise``) and
+  feed it to ``hw_forward(sa_noise=...)`` — which is how the streaming path
+  is test-enforced bit-identical to per-window ``hw_forward`` on every hop,
+  noise and chip offsets included.  The per-hop evaluation is hoisted into
+  ONE batched key derivation for all layers and streams
+  (``hop_sa_noise_fields``), not a vmapped ``fold_in`` per layer.
 
 ``StreamEngine`` wraps init/step as jitted functions over a batch of
-streams (the scheduler batches all active slots into ONE fused-kernel
-launch per layer); ``streaming=False`` selects the recompute fallback,
-which calls ``hw_forward`` on the full window per hop and is bit-identical
-to it by construction.
+streams.  **One-launch-per-layer invariant:** a ``stream_step`` over a
+batch of B streams issues exactly one fused ``pallas_call`` per IMC layer
+(conv1..conv5) regardless of B — the scheduler
+(repro.serving.scheduler) rides every live slot on the same launch, masked
+slots included.  ``streaming=False`` selects the recompute fallback, which
+calls ``hw_forward`` on the full window per hop and is bit-identical to it
+by construction.
+
+``gated_step`` is the voice-activity-gated no-op advance: a hop the VAD
+(repro.serving.vad) classified as silence shifts the layer carries and the
+GAP ring by their per-hop column counts **without launching any IMC
+kernel** — the shifted-in columns are the folded net's constant
+steady-state response to silent audio (``repro.models.kws.silence_columns``),
+so the state geometry stays hop-exact while the chip sleeps (leakage-only
+in the energy model, ``repro.core.energy.gated_energy_summary``).
 """
 
 from __future__ import annotations
@@ -175,7 +190,8 @@ def _hop_sa_noise(keys: jax.Array, hops: jax.Array, layer: int,
                   cfg: kws.KWSConfig, geom: StreamGeometry,
                   std: float) -> jax.Array:
     """Field values for one hop's tail conv columns, batched over streams:
-    keys (B, 2), hops (B,) -> (B, t_conv_tail, C)."""
+    keys (B, 2), hops (B,) -> (B, t_conv_tail, C).  Single-layer form —
+    ``stream_step`` uses the cross-layer ``hop_sa_noise_fields`` hoist."""
     lg = geom.layers[layer]
     n_new = lg.d_out * cfg.pools[layer]
     n_tail = lg.t_conv - lg.conv_lo
@@ -185,6 +201,51 @@ def _hop_sa_noise(keys: jax.Array, hops: jax.Array, layer: int,
         return sa_noise_columns(key, layer, cols, cfg.channels[layer], std)
 
     return jax.vmap(one)(keys, hops)
+
+
+def hop_sa_noise_fields(keys: jax.Array, hops: jax.Array,
+                        cfg: kws.KWSConfig, geom: StreamGeometry,
+                        std: float) -> Dict[str, jax.Array]:
+    """All IMC layers' tail noise-field values for one hop in ONE batched
+    key derivation: keys (B, 2), hops (B,) -> {conv_i: (B, n_tail_i, C_i)}.
+
+    Bit-identical to calling ``_hop_sa_noise`` per layer (the field is
+    unchanged), but the ``fold_in(fold_in(key, layer), col)`` chain for
+    every (layer, column) pair of the hop is flattened into a single
+    vmapped hash over ~sum(n_tail_i) elements instead of one tiny vmapped
+    draw per layer per hop — the cross-stream dedup the ROADMAP called out
+    (~5 separate key-derivation kernels per hop per stream batch in noisy
+    mode).  The per-layer normal draws remain separate because each
+    layer's channel width differs (threefry draws are not prefix-stable
+    across shapes, so a single padded draw would change the field)."""
+    specs = []                       # (layer, n_tail, c_out) + static cols
+    col_chunks = []
+    lid_chunks = []
+    for i in range(1, cfg.num_conv_layers):
+        lg = geom.layers[i]
+        n_new = lg.d_out * cfg.pools[i]
+        n_tail = lg.t_conv - lg.conv_lo
+        specs.append((i, n_tail, cfg.channels[i]))
+        col_chunks.append((n_new, lg.conv_lo, n_tail))
+        lid_chunks.append(jnp.full((n_tail,), i, jnp.int32))
+    layer_ids = jnp.concatenate(lid_chunks)            # (sum n_tail,)
+
+    def one_stream(key, hop):
+        cols = jnp.concatenate([
+            hop * n_new + lo + jnp.arange(n)
+            for (n_new, lo, n) in col_chunks])
+        flat_keys = jax.vmap(
+            lambda l, a: jax.random.fold_in(jax.random.fold_in(key, l), a)
+        )(layer_ids, cols)                             # one batched hash
+        out, base = {}, 0
+        for (i, n_tail, c_out) in specs:
+            ks = flat_keys[base:base + n_tail]
+            out[f"conv{i}"] = std * jax.vmap(
+                lambda k: jax.random.normal(k, (c_out,)))(ks)
+            base += n_tail
+        return out
+
+    return jax.vmap(one_stream)(keys, hops)
 
 
 # ---------------------------------------------------------------------------
@@ -295,16 +356,17 @@ def stream_step(hw, state: StreamState, audio: jax.Array,
     x = jnp.concatenate([state.audio_carry, audio], axis=1)
     new_audio_carry = _tail(x, geom.layers[0].carry)
     h = kws.hw_conv_layer(hwp, 0, x[..., None], cfg)
+    noise_all = None
+    if sa_noise_std > 0.0:
+        noise_all = hop_sa_noise_fields(state.key, state.hop, cfg, geom,
+                                        sa_noise_std)
     new_carries = []
     for i in range(1, cfg.num_conv_layers):
         lg = geom.layers[i]
         name = f"conv{i}"
         inp = jnp.concatenate([state.carries[i - 1], h], axis=1)
         new_carries.append(_tail(inp, lg.carry))
-        noise = None
-        if sa_noise_std > 0.0:
-            noise = _hop_sa_noise(state.key, state.hop, i, cfg, geom,
-                                  sa_noise_std)
+        noise = noise_all[name] if noise_all is not None else None
         off = chip_offsets[name] if chip_offsets is not None else None
         if use_kernel:
             from repro.kernels.imc_mav import ops as mav_ops
@@ -363,6 +425,67 @@ def _window_forward(hw, window, keys, hops, cfg, geom, *, chip_offsets,
                                sa_noise_std=sa_noise_std, sa_noise=noise,
                                use_kernel=use_kernel)
     return logits, WindowState(window=window, hop=hops + 1, key=keys)
+
+
+# ---------------------------------------------------------------------------
+# Voice-activity-gated no-op advance (no IMC launch)
+# ---------------------------------------------------------------------------
+
+
+def silence_fills(cfg: kws.KWSConfig,
+                  sil: Dict[str, jax.Array]) -> Tuple[jax.Array, ...]:
+    """Order the per-layer silence columns (``kws.silence_columns``) into
+    the tuple ``gated_step`` consumes: fills[i] is the constant (C_i,)
+    steady-state output column of conv layer i on silent audio — the value
+    shifted into layer i+1's carry (and, for the last layer, the GAP ring)
+    on a gated hop."""
+    return tuple(sil[f"conv{i}"] for i in range(cfg.num_conv_layers))
+
+
+def gated_step(state: StreamState, cfg: kws.KWSConfig, geom: StreamGeometry,
+               fills: Tuple[jax.Array, ...]) -> StreamState:
+    """Advance a batch of streams by one *silent* hop without computing.
+
+    The VAD classified the hop as silence, so no IMC kernel launches:
+    every carry and the GAP ring shift by their per-hop column counts, the
+    shifted-in columns being each layer's constant response to silent
+    audio (valid convolutions of a constant input are constant, so the
+    fill is a single (C_i,) vector per layer).  The audio carry shifts in
+    zeros (the unsampled microphone).  ``hop`` still advances, keeping the
+    absolute-column noise field aligned for the next computed hop.
+
+    This is the energy model's leakage-only hop: the only digital activity
+    is the VAD front end (see ``repro.core.energy.gated_energy_summary``).
+    On all-speech audio ``gated_step`` never runs, which is why gating with
+    the VAD forced to "speech" stays bit-identical to ungated streaming."""
+    b = state.hop.shape[0]
+    audio_carry = _tail(
+        jnp.concatenate([state.audio_carry,
+                         jnp.zeros((b, geom.hop))], axis=1),
+        geom.layers[0].carry)
+    new_carries = []
+    for i in range(1, cfg.num_conv_layers):
+        lg = geom.layers[i]
+        fill = jnp.broadcast_to(fills[i - 1],
+                                (b, lg.d_in, fills[i - 1].shape[0]))
+        new_carries.append(_tail(
+            jnp.concatenate([state.carries[i - 1], fill], axis=1),
+            lg.carry))
+    ring_fill = jnp.broadcast_to(fills[-1],
+                                 (b, geom.d_feat, fills[-1].shape[0]))
+    ring = jnp.concatenate([state.ring[:, geom.d_feat:], ring_fill], axis=1)
+    return StreamState(audio_carry=audio_carry, carries=tuple(new_carries),
+                       ring=ring, hop=state.hop + 1, key=state.key)
+
+
+def gated_window_step(state: WindowState, geom: StreamGeometry
+                      ) -> WindowState:
+    """Recompute-fallback twin of ``gated_step``: slide the raw window by
+    one hop of zeros (silence) without running hw_forward."""
+    b = state.hop.shape[0]
+    window = jnp.concatenate(
+        [state.window[:, geom.hop:], jnp.zeros((b, geom.hop))], axis=1)
+    return WindowState(window=window, hop=state.hop + 1, key=state.key)
 
 
 # ---------------------------------------------------------------------------

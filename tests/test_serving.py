@@ -10,7 +10,17 @@
   IMC layer, admits/evicts under randomized arrival, and each stream's
   decisions match a dedicated single-stream engine bit-for-bit;
 * the decision head smooths, fires once (hysteresis) and respects the
-  refractory window.
+  refractory window;
+* voice-activity gating: with the VAD forced to "speech" the gated server
+  is bit-identical to an ungated one (noise + chip offsets included);
+  silent hops launch NO Pallas kernels (the no-op fill advance); a
+  silence run within ``wake_margin`` is replayed on wake so the decision
+  sequence matches ungated streaming exactly; gated hops are charged
+  leakage-only in the energy model (>= 3x reduction at 20% duty);
+* backpressure: bounded admission queue rejects, the latency SLO sheds
+  backlog, slots autoscale between min_slots/max_slots;
+* dynamic hop: calm posteriors widen the effective hop, activity narrows
+  it back, states are rebuilt across the change.
 """
 
 import jax
@@ -20,11 +30,13 @@ import pytest
 from _hypothesis_shim import given, settings, st
 from jax.experimental import pallas as pl
 
-from repro.core import imc
+from repro.core import energy, imc
 from repro.models import kws as m
-from repro.serving import (DecisionConfig, StreamEngine, StreamServer,
-                           decision_init, decision_step, hop_alignment,
-                           make_stream_geometry, streaming_layer_stats,
+from repro.serving import (AdmissionConfig, DecisionConfig,
+                           DynamicHopConfig, StreamEngine, StreamServer,
+                           VADConfig, decision_init, decision_step,
+                           hop_alignment, make_stream_geometry,
+                           streaming_layer_stats, vad_init, vad_step,
                            window_sa_noise)
 from repro.serving import stream as sv
 
@@ -340,6 +352,291 @@ def test_scheduler_soak_randomized_admit_evict(seed):
             assert got <= expect
         else:
             assert got == expect, (k, got, expect)
+
+
+# ---------------------------------------------------------------------------
+# Voice-activity gating
+# ---------------------------------------------------------------------------
+
+
+def test_vad_hysteresis_hangover_and_force():
+    vcfg = VADConfig(threshold_on_db=-30.0, threshold_off_db=-40.0,
+                     ema=0.0, hang=2)
+    state = vad_init(1)
+    loud = jnp.full((1, 64), 0.5)          # ~ -6 dBFS
+    mid = jnp.full((1, 64), 0.02)          # ~ -34 dBFS: inside the band
+    quiet = jnp.full((1, 64), 1e-4)        # ~ -80 dBFS
+
+    state, sp = vad_step(vcfg, state, quiet)
+    assert not bool(sp[0])
+    state, sp = vad_step(vcfg, state, mid)   # below on: still silence
+    assert not bool(sp[0])
+    state, sp = vad_step(vcfg, state, loud)  # onset
+    assert bool(sp[0])
+    state, sp = vad_step(vcfg, state, mid)   # above off: speech held
+    assert bool(sp[0])
+    state, sp = vad_step(vcfg, state, quiet)  # below off: hangover 2 hops
+    assert bool(sp[0])
+    state, sp = vad_step(vcfg, state, quiet)
+    assert bool(sp[0])
+    state, sp = vad_step(vcfg, state, quiet)  # hangover expired
+    assert not bool(sp[0])
+
+    # mask-aware: inactive rows keep state and classification
+    state2 = vad_init(2)
+    both_loud = jnp.tile(loud, (2, 1))
+    state2, sp = vad_step(vcfg, state2, both_loud,
+                          active=jnp.asarray([True, False]))
+    assert bool(sp[0]) and not bool(sp[1])
+    assert int(state2.seen[0]) == 1 and int(state2.seen[1]) == 0
+
+    for force, want in (("speech", True), ("silence", False)):
+        fs, sp = vad_step(VADConfig(force=force), vad_init(1), quiet)
+        assert bool(sp[0]) is want
+
+    with pytest.raises(ValueError):
+        VADConfig(force="maybe")
+    with pytest.raises(ValueError):
+        VADConfig(threshold_on_db=-50.0, threshold_off_db=-40.0)
+
+
+def test_hop_noise_fields_match_per_layer_draws():
+    """The cross-layer hoisted draw (one batched fold_in chain per hop) is
+    bit-identical to the per-layer per-column field evaluation."""
+    geom = make_stream_geometry(CFG, HOP)
+    keys = jnp.stack([jax.random.PRNGKey(11), jax.random.PRNGKey(12)])
+    hops = jnp.asarray([0, 9], jnp.int32)
+    allf = sv.hop_sa_noise_fields(keys, hops, CFG, geom, 0.9)
+    for i in range(1, CFG.num_conv_layers):
+        ref = sv._hop_sa_noise(keys, hops, i, CFG, geom, 0.9)
+        np.testing.assert_array_equal(np.asarray(allf[f"conv{i}"]),
+                                      np.asarray(ref), err_msg=f"layer {i}")
+
+
+@pytest.mark.streaming
+def test_gated_forced_speech_bitexact_vs_ungated(folded):
+    """The gating-equivalence gate: with the VAD forced to 'speech' on
+    every hop, the gated server's decision events are bit-identical to an
+    ungated server's — SA noise and chip offsets included (all-speech
+    audio never gates, so the extra machinery must be a perfect no-op)."""
+    hw = folded
+    offs = _chip()
+    rng = np.random.default_rng(2)
+    wavs = {f"s{i}": rng.uniform(-1, 1, L + 4 * HOP).astype(np.float32)
+            for i in range(2)}
+
+    def run(vad):
+        srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                           sa_noise_std=0.9, chip_offsets=offs, vad=vad,
+                           seed=3)
+        for k, v in wavs.items():
+            srv.submit(k, v)
+            srv.finish(k)
+        return srv.drain()
+
+    ev_plain = run(None)
+    ev_forced = run(VADConfig(force="speech"))
+    assert ev_forced == ev_plain
+    assert len(ev_plain) == 2 * 5
+
+
+@pytest.mark.streaming
+def test_gated_silence_advances_without_kernel_launches(folded, monkeypatch):
+    """Silent hops must not launch any Pallas kernel: the state advances by
+    the masked no-op column fill (each layer's constant silence response
+    shifts into the carries and the GAP ring) while the chip sleeps."""
+    hw = folded
+    srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                       vad=VADConfig(threshold_on_db=-40.0,
+                                     threshold_off_db=-50.0,
+                                     wake_margin=0, hang=0))
+    rng = np.random.default_rng(3)
+    for i in range(2):
+        # loud first window (ring holds real activations), silent tail
+        wav = (1e-4 * rng.standard_normal(L + 4 * HOP)).astype(np.float32)
+        wav[:L] = rng.uniform(-1, 1, L)
+        srv.submit(f"q{i}", wav)
+        srv.finish(f"q{i}")
+    events = srv.step()                      # admissions (init: kernels OK)
+    assert len(events) == 2
+    ring_before = np.asarray(srv._state.ring)
+
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    for _ in range(2):
+        assert srv.step() == []              # silent hops: no events
+    assert calls == [], "gated hops must not launch kernels"
+    ring_after = np.asarray(srv._state.ring)
+    assert not np.array_equal(ring_before, ring_after)
+    # the shifted-in ring columns are the last layer's silence response
+    fill = np.asarray(srv._fills[-1])
+    d = srv.geom.d_feat
+    np.testing.assert_array_equal(ring_after[:, -d:],
+                                  np.broadcast_to(fill, (2, d, fill.size)))
+    s = srv.stats()
+    assert s["gated_hops"] == 4 and s["speech_hops"] == 0
+    assert s["duty_cycle"] == 0.0
+
+
+@pytest.mark.streaming
+def test_wake_margin_replays_keyword_prefix(folded):
+    """A keyword straddling a silence->speech edge is still detected: a
+    silent run no longer than ``wake_margin`` is deferred (not gated), and
+    the wake replays it through the real IMC path, so the gated decision
+    sequence is bit-identical to ungated streaming."""
+    hw = folded
+    rng = np.random.default_rng(4)
+    wav = rng.uniform(-1, 1, L + 8 * HOP).astype(np.float32)
+    wav[L + 2 * HOP:L + 5 * HOP] *= 1e-4     # 3 silent hops mid-stream
+    dcfg = DecisionConfig(smooth=3, threshold_on=0.05, threshold_off=0.02,
+                          refractory=4)      # low bar: untrained net fires
+
+    def run(vad):
+        srv = StreamServer(hw, CFG, hop=HOP, slots=1, use_kernel=True,
+                           decision=dcfg, vad=vad, seed=5)
+        srv.submit("s", wav)
+        srv.finish("s")
+        return srv.drain(), srv
+
+    ev_ungated, _ = run(None)
+    ev_gated, srv = run(VADConfig(threshold_on_db=-40.0,
+                                  threshold_off_db=-50.0,
+                                  wake_margin=3, hang=0))
+    assert ev_gated == ev_ungated            # every hop decided, bit-equal
+    assert any(e["trigger"] for e in ev_gated)
+    s = srv.stats()
+    assert s["gated_hops"] == 0              # silence stayed within margin
+    assert s["speech_hops"] == 8
+
+
+def test_gated_energy_leakage_only_and_reduction():
+    """Idle-hop accounting: a gated hop charges the VAD's dynamic energy
+    plus leakage for the VAD's awake cycles — nothing else — and at 20%
+    speech duty the duty-cycled uJ/decision drops >= 3x vs ungated
+    streaming (the acceptance target)."""
+    cfg = m.KWSConfig(sample_len=2000)
+    geom = make_stream_geometry(cfg, 256)
+    off = m.layer_stats(cfg)
+    strm = streaming_layer_stats(cfg, geom)
+    g = energy.gated_energy_summary(off, strm, hop_samples=256,
+                                    duty_cycle=0.2)
+    v = energy.vad_stats(256)
+    vad_dyn = (v["macs"] * energy.E_DIG_MAC8
+               + v["in_bits"] * energy.E_SRAM_RD_BIT
+               + v["out_bits"] * energy.E_SRAM_WR_BIT
+               + v["cycles"] * energy.E_CTRL_CYCLE)
+    vad_leak = energy.LEAKAGE_W * v["cycles"] / g["freq_hz"]
+    # leakage-only: the idle hop is exactly VAD dynamic + VAD-awake leakage
+    np.testing.assert_allclose(g["idle_uj_per_hop"],
+                               (vad_dyn + vad_leak) * 1e6, rtol=1e-9)
+    np.testing.assert_allclose(g["vad_leakage_uj"], vad_leak * 1e6,
+                               rtol=1e-9)
+    strm_uj = energy.kws_streaming_report(strm).energy_j_per_decision * 1e6
+    assert g["idle_uj_per_hop"] < 0.05 * strm_uj
+    assert g["ungated_uj_per_decision"] == pytest.approx(
+        strm_uj + g["idle_uj_per_hop"])
+    # the acceptance target: >= 3x at 20% duty
+    assert g["reduction_vs_ungated"] >= 3.0
+    # duty 1.0 degenerates to ungated (gating never penalizes speech)
+    g1 = energy.gated_energy_summary(off, strm, hop_samples=256,
+                                     duty_cycle=1.0)
+    assert g1["gated_uj_per_decision"] == pytest.approx(
+        g1["ungated_uj_per_decision"])
+    with pytest.raises(ValueError):
+        energy.gated_energy_summary(off, strm, hop_samples=256,
+                                    duty_cycle=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: bounded queue, latency SLO shedding, slot autoscaling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_backpressure_reject_shed_autoscale(folded):
+    hw = folded
+    rng = np.random.default_rng(6)
+    srv = StreamServer(hw, CFG, hop=HOP, slots=1, use_kernel=True,
+                       admission=AdmissionConfig(max_queue=1, max_lag_s=0.06,
+                                                 min_slots=1, max_slots=2,
+                                                 scale_up_after=1,
+                                                 scale_down_after=2))
+    mk = lambda n: rng.uniform(-1, 1, n).astype(np.float32)
+    assert srv.submit("a", mk(L)) == "slot"
+    assert srv.submit("b", mk(L)) == "queued"
+    assert srv.submit("c", mk(L)) == "rejected"   # queue bound hit
+    assert "c" not in srv.stats()["per_stream"]
+    srv.step()
+    assert srv.slots == 2                    # scaled up under queue pressure
+
+    # over-admitted soak: keep flooding 'a' past the 0.06 s SLO (960
+    # samples); the server sheds its oldest backlog and re-inits rather
+    # than serving arbitrarily stale audio
+    for _ in range(4):
+        srv.submit("a", mk(4000))
+        srv.step()
+    s = srv.stats()
+    assert s["shed"]["events"] >= 1
+    assert s["per_stream"]["a"]["sheds"] >= 1
+    assert s["rejected_streams"] == 1
+    # after shedding, the backlog is at the low-water mark, not growing
+    rec = srv._streams["a"]
+    assert len(rec.buf) <= max(srv.geom.window,
+                               int(0.06 * CFG.sample_rate))
+    # streams keep making progress (decisions continue post-shed)
+    assert s["decisions"] > 0
+    for k in ("a", "b"):
+        srv.finish(k)
+    srv.drain()
+    for _ in range(3):                       # idle ticks -> scale down
+        srv.step()
+    assert srv.slots == 1
+    assert not srv.active_streams()
+
+
+# ---------------------------------------------------------------------------
+# Dynamic hop
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_dynamic_hop_widens_on_calm_and_narrows_on_activity(folded):
+    """Quiet audio widens the effective hop (x2 then x4); the loud tail
+    wakes the VAD, which narrows back to the base hop; states are rebuilt
+    across every change and serving continues."""
+    hw = folded
+    rng = np.random.default_rng(7)
+    wav = (1e-4 * rng.standard_normal(L + 40 * HOP)).astype(np.float32)
+    wav[:L] = rng.uniform(-1, 1, L)
+    wav[L + 30 * HOP:] = rng.uniform(-1, 1, 10 * HOP)
+    srv = StreamServer(hw, CFG, hop=HOP, slots=1, use_kernel=True,
+                       vad=VADConfig(threshold_on_db=-40.0,
+                                     threshold_off_db=-50.0,
+                                     wake_margin=1, hang=0),
+                       dynamic_hop=DynamicHopConfig(max_multiplier=4,
+                                                    widen_after=3,
+                                                    calm_score=0.35))
+    srv.submit("d", wav)
+    srv.finish("d")
+    mults = []
+    while srv.active_streams():
+        srv.step()
+        mults.append(srv.hop_multiplier)
+    assert max(mults) == 4                   # widened during the calm run
+    first4 = mults.index(4)
+    assert 1 in mults[first4:]               # narrowed after the wake
+    assert srv.stats()["hop_retargets"] >= 2
+    assert srv.hop == HOP * srv.hop_multiplier
+
+    # misaligned/oversize multiples are rejected by the geometry guard
+    assert not srv._feasible_mult(L // HOP)  # hop == window: invalid
+    assert srv._feasible_mult(2)
 
 
 # ---------------------------------------------------------------------------
