@@ -18,6 +18,12 @@ Run:  PYTHONPATH=src python -m benchmarks.run
            path on a --duty speech/silence mixture; writes decisions/sec,
            MACs and the duty-cycled uJ/decision to
            results/BENCH_streaming.json)
+      PYTHONPATH=src python -m benchmarks.run --customize
+          (on-device customization as a serving workload: enrollment
+           sessions driven through scheduler ticks — bias compensation +
+           SGA fine-tuning as background jobs; writes the
+           utterances-to-recovered-accuracy trajectory and the analytical
+           uJ per fine-tune step to results/BENCH_customize.json)
 """
 
 from __future__ import annotations
@@ -511,6 +517,131 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
     return report
 
 
+def customize_bench(out_path: str | None = None, sample_len: int = 2_000,
+                    hop: int = 256, slots: int = 4,
+                    utts_per_class: tuple = (1, 3),
+                    epochs: int = 120) -> dict:
+    """On-device customization as a serving workload: enrollment sessions
+    driven through the StreamServer's scheduler ticks (bias compensation
+    + error-scaled/SGA fine-tuning as background jobs), recording the
+    utterances-to-recovered-accuracy trajectory and the analytical uJ per
+    fine-tune step into BENCH_customize.json.
+
+    Uses the cached trained model (results/kws_model.pkl) when present —
+    the recovery numbers are meaningful there; otherwise an untrained fold
+    exercises the identical mechanics.  The 'before' row is the chip with
+    static MAV offsets and no compensation (the Table IV premise)."""
+    import pickle
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core import imc
+    from repro.core.onchip_training import (OnChipTrainConfig,
+                                            head_accuracy)
+    from repro.data import audio
+    from repro.kernels import default_interpret
+    from repro.models import kws as m
+    from repro.serving import CustomizeConfig, StreamServer
+    from repro.training import kws as tr
+
+    cfg = m.KWSConfig(sample_len=sample_len)
+    pkl = os.path.join(RESULTS, "kws_model.pkl")
+    trained = os.path.exists(pkl) and sample_len == 2_000
+    if trained:
+        with open(pkl, "rb") as f:
+            params, state = pickle.load(f)
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        state = m.KWSState(*[jax.tree_util.tree_map(jnp.asarray, s)
+                             for s in state])
+    else:
+        params = m.init_params(jax.random.PRNGKey(0), cfg)
+        state = m.init_state(cfg)
+    hw = m.fold_params(params, state, cfg, pack=True)
+    chans = {f"conv{i}": cfg.channels[i]
+             for i in range(1, cfg.num_conv_layers)}
+    offs = imc.sample_chip_offsets(jax.random.PRNGKey(7), chans,
+                                   imc.IMCNoiseParams(mav_offset_std=8.0))
+
+    n_max = max(utts_per_class)
+    (xp_tr, yp_tr), (xp_te, yp_te) = audio.make_personal(
+        train_per_class=n_max, test_per_class=4, length=sample_len,
+        accent_shift=0.18)
+    before = tr.evaluate_hw(hw, xp_te, yp_te, cfg, chip_offsets=offs)
+
+    # the chip's error-scaling mode: fixed 1.375 (shift-add friendly, §V-C)
+    tcfg = OnChipTrainConfig(epochs=epochs, fixed_error_scale=1.375)
+    trajectory = []
+    uj = None
+    for n in utts_per_class:
+        srv = StreamServer(hw, cfg, hop=hop, slots=slots, use_kernel=True,
+                           chip_offsets=offs)
+        sess = srv.customize(f"user{n}", CustomizeConfig(
+            train=tcfg, epochs_per_tick=24, layers_per_tick=5))
+        # n utterances per keyword, in enrollment-UX order
+        by_class = {}
+        for wav, lab in zip(xp_tr, yp_tr):
+            by_class.setdefault(int(lab), []).append(wav)
+        t0 = time.perf_counter()
+        for c, wavs in sorted(by_class.items()):
+            for wav in wavs[:n]:
+                sess.enroll(c, wav)
+        sess.finish_enrollment()
+        steps = 0
+        while not sess.done and steps < 5000:
+            srv.step()
+            steps += 1
+        assert sess.done, sess.phase
+        wall = time.perf_counter() - t0
+        res = sess.result
+        hw_n = sess.refolded()
+        f_te = tr.hw_features(hw_n, xp_te, cfg, chip_offsets=offs)
+        acc = float(head_accuracy(jnp.asarray(f_te), jnp.asarray(yp_te),
+                                  jnp.asarray(res.fc_w),
+                                  jnp.asarray(res.fc_b), tcfg))
+        uj = res.energy
+        trajectory.append({
+            "utterances_per_class": n,
+            "utterances": res.n_utterances,
+            "accuracy": round(acc, 4),
+            "scheduler_ticks": steps,
+            "wall_s": round(wall, 2),
+            "train_history": res.history,
+        })
+        _row(f"customize_{n}_per_class", "",
+             f"acc={acc:.4f};before={before:.4f};ticks={steps}")
+
+    report = {
+        "backend": jax.default_backend(),
+        "interpret": bool(default_interpret()),
+        "trained_model": trained,
+        "window": sample_len,
+        "hop": hop,
+        "slots": slots,
+        "epochs": epochs,
+        "chip_mav_offset_std": 8.0,
+        "accuracy_before": round(before, 4),
+        "recovery_trajectory": trajectory,
+        "energy_per_finetune_step": {
+            k: round(v, 4) if isinstance(v, float) else v
+            for k, v in (uj or {}).items()
+        },
+    }
+    _row("customize_before_accuracy", "", f"{before:.4f}")
+    _row("customize_uj_per_finetune_step", "",
+         f"{report['energy_per_finetune_step'].get('uj_per_finetune_step')}")
+
+    if out_path is None:
+        out_path = os.path.normpath(os.path.join(RESULTS,
+                                                 "BENCH_customize.json"))
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    _row("customize_json", "", out_path)
+    return report
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
@@ -540,9 +671,20 @@ def main(argv=None) -> None:
     ap.add_argument("--duty", type=float, default=0.2,
                     help="--streaming speech duty cycle of the gated "
                          "mixture (default 0.2)")
+    ap.add_argument("--customize", action="store_true",
+                    help="run the enrollment-session customization "
+                         "benchmark (utterances-to-recovered-accuracy + "
+                         "uJ per fine-tune step) and emit "
+                         "BENCH_customize.json")
+    ap.add_argument("--customize-out", default=None, metavar="PATH",
+                    help="output path for BENCH_customize.json")
+    ap.add_argument("--customize-epochs", type=int, default=120,
+                    help="--customize fine-tune epochs per session "
+                         "(default 120)")
     args = ap.parse_args(argv)
-    if args.imc_fused and args.streaming:
-        ap.error("--imc-fused and --streaming are separate runs; pick one")
+    if sum((args.imc_fused, args.streaming, args.customize)) > 1:
+        ap.error("--imc-fused/--streaming/--customize are separate runs; "
+                 "pick one")
     if not args.imc_fused and (args.imc_fused_out is not None
                                or args.batches is not None):
         ap.error("--imc-fused-out/--batches only apply with --imc-fused")
@@ -552,9 +694,14 @@ def main(argv=None) -> None:
                                or args.duty != 0.2):
         ap.error("--streaming-out/--hop/--stream-slots/--stream-hops/"
                  "--duty only apply with --streaming")
-    if args.sample_len is not None and not (args.imc_fused
-                                            or args.streaming):
-        ap.error("--sample-len only applies with --imc-fused/--streaming")
+    if not args.customize and (args.customize_out is not None
+                               or args.customize_epochs != 120):
+        ap.error("--customize-out/--customize-epochs only apply with "
+                 "--customize")
+    if args.sample_len is not None and not (args.imc_fused or args.streaming
+                                            or args.customize):
+        ap.error("--sample-len only applies with "
+                 "--imc-fused/--streaming/--customize")
     print("name,us_per_call,derived")
     if args.imc_fused:
         batches = tuple(int(b) for b in
@@ -568,6 +715,11 @@ def main(argv=None) -> None:
                         sample_len=args.sample_len or 2_000,
                         hop=args.hop, slots=args.stream_slots,
                         hops=args.stream_hops, duty=args.duty)
+        return
+    if args.customize:
+        customize_bench(args.customize_out,
+                        sample_len=args.sample_len or 2_000,
+                        epochs=args.customize_epochs)
         return
     table2_model()
     table3_hw_constraints()

@@ -1,10 +1,14 @@
-"""On-chip customization ablation (the paper's Table IV) on a trained model.
+"""On-chip customization ablation (the paper's Table IV) on a trained model,
+plus the same loop run as a *serving workload* (an enrollment session on the
+StreamServer — docs/CUSTOMIZATION.md), asserted bit-identical.
 
 Uses the cached model from benchmarks (results/kws_model.pkl) if present,
 otherwise trains briefly.  Shows each technique's contribution:
 full-precision baseline vs naive-quantized vs +error-scaling vs +SGA vs +RGP.
 
 Run:  PYTHONPATH=src python examples/customize_onchip.py
+      REPRO_EXAMPLES_SMOKE=1 ... for a seconds-scale smoke run (used by
+      tests/test_examples.py)
 """
 import os
 import pickle
@@ -13,34 +17,41 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import imc
 from repro.core.onchip_training import (OnChipTrainConfig, head_accuracy,
                                         quantized_head_finetune)
 from repro.data import audio
 from repro.models import kws as m
+from repro.serving import CustomizeConfig, StreamServer
 from repro.training import kws as tr
 
-L = 2000
+SMOKE = os.environ.get("REPRO_EXAMPLES_SMOKE") == "1"
+L = 640 if SMOKE else 2000
+HOP = 64 if SMOKE else 256
+EPOCHS = 40 if SMOKE else 600
 cfg = m.KWSConfig(sample_len=L)
 pkl = os.path.join(os.path.dirname(__file__), "..", "results",
                    "kws_model.pkl")
-if os.path.exists(pkl):
+if os.path.exists(pkl) and not SMOKE:
     with open(pkl, "rb") as f:
         params, state = pickle.load(f)
     params = jax.tree_util.tree_map(jnp.asarray, params)
     state = m.KWSState(*[jax.tree_util.tree_map(jnp.asarray, s)
                          for s in state])
 else:
-    (xtr, ytr), _ = audio.make_gscd_like(train_per_class=24,
-                                         test_per_class=4, length=L)
+    (xtr, ytr), _ = audio.make_gscd_like(
+        train_per_class=4 if SMOKE else 24, test_per_class=2, length=L)
     params, state = tr.train_base(
-        xtr, ytr, cfg, tr.TrainConfig(epochs=24, batch_size=80, lr=3e-3))
+        xtr, ytr, cfg,
+        tr.TrainConfig(epochs=2 if SMOKE else 24,
+                       batch_size=40 if SMOKE else 80, lr=3e-3),
+        verbose=not SMOKE)
 
 # fold ONCE (packed: the fused kernel's operands are precomputed here, not
 # per evaluation call) and reuse the same PackedHWParams everywhere below
 hw = m.fold_params(params, state, cfg, pack=True)
 (xp_tr, yp_tr), (xp_te, yp_te) = audio.make_personal(
-    train_per_class=3, test_per_class=6, length=L, accent_shift=0.18)
+    train_per_class=3, test_per_class=2 if SMOKE else 6, length=L,
+    accent_shift=0.18)
 f_tr = tr.hw_features(hw, xp_tr, cfg)
 f_te = tr.hw_features(hw, xp_te, cfg)
 print(f"before customization: "
@@ -52,9 +63,36 @@ for name, kw in {
     "+ SGA": dict(error_scaling=True, sga=True),
     "+ RGP": dict(error_scaling=True, sga=True, rgp=True),
 }.items():
-    ocfg = OnChipTrainConfig(epochs=600, **kw)
+    ocfg = OnChipTrainConfig(epochs=EPOCHS, **kw)
     w, b = quantized_head_finetune(jnp.asarray(f_tr), jnp.asarray(yp_tr),
                                    hw.hw.fc_w, hw.hw.fc_b, ocfg)
     acc = float(head_accuracy(jnp.asarray(f_te), jnp.asarray(yp_te), w, b,
                               ocfg))
     print(f"{name:18s}: {acc:.3f}")
+
+# --- the same loop as a serving workload: an enrollment session -------------
+# A few personal utterances enroll through a live stream; the fine-tune runs
+# as scheduler-ticked background jobs.  With compensation off (no chip
+# offsets here) the session must land on EXACTLY the offline loop's head.
+n_enroll = 6 if SMOKE else 10
+utts, labs = xp_tr[:n_enroll], yp_tr[:n_enroll]
+tcfg = OnChipTrainConfig(epochs=EPOCHS, error_scaling=True, sga=True)
+srv = StreamServer(hw, cfg, hop=HOP, slots=4, use_kernel=True)
+sess = srv.customize("mic0", CustomizeConfig(train=tcfg, compensate=False,
+                                             epochs_per_tick=32))
+for wav, lab in zip(utts, labs):
+    sess.enroll(int(lab), wav)
+sess.finish_enrollment()
+steps = 0
+while not sess.done:
+    srv.step()
+    steps += 1
+    assert steps < 2000, f"session stuck in phase {sess.phase}"
+f_sub = tr.hw_features(hw, utts, cfg)
+w_ref, b_ref = quantized_head_finetune(jnp.asarray(f_sub), jnp.asarray(labs),
+                                       hw.hw.fc_w, hw.hw.fc_b, tcfg)
+assert np.array_equal(sess.result.fc_w, np.asarray(w_ref))
+assert np.array_equal(sess.result.fc_b, np.asarray(b_ref))
+print(f"enrollment session   : {n_enroll} utterances, {steps} scheduler "
+      f"ticks, bit-identical to the offline loop; "
+      f"{sess.result.energy['uj_per_finetune_step']:.1f} uJ/fine-tune step")

@@ -19,6 +19,8 @@ multi-stream serving engine.
      energy accounting.
 
 Run:  PYTHONPATH=src python examples/stream_kws.py
+      REPRO_EXAMPLES_SMOKE=1 ... for a seconds-scale smoke run (used by
+      tests/test_examples.py)
 """
 import os
 import pickle
@@ -30,12 +32,15 @@ from repro.data import audio
 from repro.models import kws as m
 from repro.serving import DecisionConfig, StreamServer, VADConfig
 
-L, HOP = 2000, 256                    # window, hop (hop/window = 0.128)
+SMOKE = os.environ.get("REPRO_EXAMPLES_SMOKE") == "1"
+L, HOP = (640, 64) if SMOKE else (2000, 256)   # hop/window = 0.1 / 0.128
+N_STREAMS = 1 if SMOKE else 3
+TAIL_HOPS = 8 if SMOKE else 24
 cfg = m.KWSConfig(sample_len=L)
 
 pkl = os.path.join(os.path.dirname(__file__), "..", "results",
                    "kws_model.pkl")
-if os.path.exists(pkl):
+if os.path.exists(pkl) and not SMOKE:
     with open(pkl, "rb") as f:
         params, state = pickle.load(f)
     params = jax.tree_util.tree_map(np.asarray, params)
@@ -55,9 +60,9 @@ rng = np.random.default_rng(0)
 (clips, labels), _ = audio.make_gscd_like(train_per_class=1,
                                           test_per_class=1, length=L)
 streams = {}
-for i in range(3):
+for i in range(N_STREAMS):
     # long stream, keyword early: the silent tail is what the VAD gates
-    wav = 0.01 * rng.standard_normal(L + 24 * HOP).astype(np.float32)
+    wav = 0.01 * rng.standard_normal(L + TAIL_HOPS * HOP).astype(np.float32)
     j = rng.integers(len(labels))
     at = int(rng.integers(0, 4 * HOP))
     wav[at:at + L] += clips[j].astype(np.float32)

@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
 """Docs consistency gate: fail CI if README.md or docs/*.md reference
-repo files, modules or CLI flags that do not exist.
+repo files, modules or CLI flags that do not exist, or carry rotten code
+snippets.
 
 Checked reference forms (inside backticks only — prose is free):
 
@@ -12,13 +13,17 @@ Checked reference forms (inside backticks only — prose is free):
   exist as a package or module (deeper components may be attributes, so
   only the first level under ``repro`` is resolved);
 * ``--flag`` tokens — the literal flag string must appear in some .py or
-  .sh file under the repo (catches renamed/removed CLI options).
+  .sh file under the repo (catches renamed/removed CLI options);
+* fenced ```python blocks — each must compile, and its import statements
+  are actually executed (with src/ on sys.path), so a renamed module or
+  symbol breaks CI instead of silently rotting the snippet.
 
 Run:  python scripts/check_docs.py
 """
 
 from __future__ import annotations
 
+import ast
 import os
 import re
 import sys
@@ -68,6 +73,38 @@ def extract_tokens(text):
     return paths, modules, flags
 
 
+def extract_python_fences(text):
+    """Bodies of ```python fenced blocks."""
+    return re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
+
+
+def check_snippet(rel, idx, code, problems):
+    """Compile the snippet and smoke-exec its imports (the cheap subset
+    that catches renamed modules/symbols without running demo code)."""
+    try:
+        tree = ast.parse(code)
+    except SyntaxError as e:
+        problems.append(f"{rel}: python fence #{idx} does not parse: {e}")
+        return
+    imports = [node for node in tree.body
+               if isinstance(node, (ast.Import, ast.ImportFrom))]
+    if not imports:
+        return
+    src = os.path.join(ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    ns = {}
+    for node in imports:
+        stmt = ast.unparse(node)
+        try:
+            exec(compile(ast.Module(body=[node], type_ignores=[]),
+                         f"<{rel} fence {idx}>", "exec"), ns)
+        except Exception as e:
+            problems.append(
+                f"{rel}: python fence #{idx} import failed: "
+                f"`{stmt}` -> {type(e).__name__}: {e}")
+
+
 def main() -> int:
     missing = []
     flag_corpus = None
@@ -94,6 +131,8 @@ def main() -> int:
                 if fl not in flag_corpus:
                     missing.append(
                         f"{rel}: flag `{fl}` not found in any .py/.sh")
+        for idx, code in enumerate(extract_python_fences(text)):
+            check_snippet(rel, idx, code, missing)
     if missing:
         print("docs check FAILED:")
         for line in missing:

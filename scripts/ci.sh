@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# CI gate: the tier-1 quick pass plus the streaming-equivalence and
-# gating-equivalence contracts and the docs consistency check.
+# CI gate: the tier-1 quick pass plus the streaming-equivalence,
+# gating-equivalence and customization-equivalence contracts and the docs
+# consistency check.
 #
 #   scripts/ci.sh            quick: everything but slow/streaming-marked
 #                            tests, then the streaming bit-exactness tests
 #                            (incl. the VAD-gating equivalence + wake-margin
-#                            replay gates), then the docs check
+#                            replay gates), the customization gates, then
+#                            the docs check
 #   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
 #                            plus the docs check
 #
@@ -15,7 +17,12 @@
 # the non-slow subset explicitly (the soak stays out — it is also marked
 # `slow`).  The gating-equivalence gate is the acceptance contract that a
 # VAD forced to "speech" leaves serving bit-identical to ungated
-# streaming, SA noise and chip offsets included.
+# streaming, SA noise and chip offsets included.  The
+# customization-equivalence gate is the acceptance contract that an
+# enrollment session driven through scheduler ticks lands on EXACTLY the
+# offline customize loop's result (compensated biases + fine-tuned head)
+# and that a mixed inference+learning tick still issues one fused-kernel
+# launch per IMC layer.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -30,4 +37,8 @@ python -m pytest -x -q -m "streaming and not slow" tests/test_serving.py
 # gating-equivalence gate (explicit, so a marker edit can't silently drop it)
 python -m pytest -x -q tests/test_serving.py \
     -k "gated_forced_speech_bitexact or wake_margin_replays"
+# customization-equivalence gate (session == offline loop; one launch per
+# layer on mixed inference+learning ticks)
+python -m pytest -x -q tests/test_customize.py \
+    -k "session_matches_offline_loop or mixed_tick_one_fused_launch"
 python scripts/check_docs.py

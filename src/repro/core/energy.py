@@ -221,6 +221,38 @@ def gated_energy_summary(offline_stats: List[dict],
     }
 
 
+def customization_energy_summary(n_utts: int, feat_dim: int,
+                                 num_classes: int, epochs: int,
+                                 freq_hz: float = 1e6) -> dict:
+    """Analytical energy of one on-chip customization run (§V-C).
+
+    One fine-tune step = one full-batch epoch over the SRAM feature
+    buffer: an 8-bit FC forward (n x d x c MACs), the LUT softmax + 8-bit
+    division (n x c each), the error/gradient passes (~2x the forward
+    MACs: the error outer product and the bias sum), the feature-buffer
+    reads and the weight/SGA-bank read-modify-write.  Consumed by
+    ``benchmarks/run.py --customize`` and the session results
+    (repro.serving.customize) as uJ-per-fine-tune-step."""
+    macs = n_utts * (feat_dim * num_classes + num_classes) * 3
+    lut = n_utts * num_classes
+    div = n_utts * num_classes
+    sram = (n_utts * feat_dim * 8                      # feature buffer read
+            + feat_dim * num_classes * 8 * 2           # weight r/w
+            + feat_dim * num_classes * 16)             # SGA bank (16-bit)
+    per_step = training_energy_j(1, freq_hz, macs_per_epoch=macs,
+                                 lut_ops=lut, div_ops=div, sram_bits=sram)
+    total = training_energy_j(epochs, freq_hz, macs_per_epoch=macs,
+                              lut_ops=lut, div_ops=div, sram_bits=sram)
+    return {
+        "freq_hz": freq_hz,
+        "n_utterances": n_utts,
+        "epochs": epochs,
+        "uj_per_finetune_step": per_step * 1e6,
+        "total_uj": total * 1e6,
+        "seconds_per_step": CYCLES_PER_TRAIN_EPOCH / freq_hz,
+    }
+
+
 def training_energy_j(num_epochs: int, freq_hz: float = 1e6,
                       macs_per_epoch: int = 0, lut_ops: int = 0,
                       div_ops: int = 0, sram_bits: int = 0) -> float:

@@ -139,9 +139,17 @@ def head_logits(features_q: jax.Array, w: jax.Array, b: jax.Array,
     return cfg.act_fmt.quantize(z) if cfg.quantized else z
 
 
-def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
-                labels_1hot: jax.Array, cfg: OnChipTrainConfig) -> HeadState:
-    """One full-batch epoch (the chip reads the whole 90-utterance set)."""
+def epoch_grads(state: HeadState, epoch: jax.Array, features_q: jax.Array,
+                labels_1hot: jax.Array, cfg: OnChipTrainConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The pre-optimizer half of one epoch: forward, hardware softmax,
+    error scaling (Eq 1-2) and gradient quantization (+ optional RGP).
+
+    Returns (gw, gb, lr, new_key) — everything ``apply_update`` (or the
+    fused ``sga_update`` kernel) needs to transition the head state.  Split
+    out of the epoch so the serving customization path
+    (repro.serving.customize) can compute per-session gradients and batch
+    the optimizer transition of many sessions into one kernel launch."""
     n = features_q.shape[0]
     lr = lr_schedule(cfg, epoch)
 
@@ -168,7 +176,6 @@ def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
     else:
         gw = features_q.T @ err / n
         gb = jnp.sum(err, axis=0) / n
-        scale = jnp.float32(1.0)
 
     key = state.key
     if cfg.rgp and cfg.quantized:
@@ -177,7 +184,16 @@ def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
                                                   cfg.grad_fmt))
         gb = cfg.grad_fmt.quantize(gb + rgp_noise(k2, gb.shape, cfg.rgp_lambda,
                                                   cfg.grad_fmt))
+    return gw, gb, lr, key
 
+
+def apply_update(state: HeadState, gw: jax.Array, gb: jax.Array,
+                 lr: jax.Array, key: jax.Array,
+                 cfg: OnChipTrainConfig) -> HeadState:
+    """The optimizer half of one epoch: SGA banking (Alg 1) + SGD step +
+    weight quantization.  This is the jnp reference of the fused
+    ``repro.kernels.sga_update`` kernel (bit-identical on the fixed-point
+    grids — the kernel equivalence test drives both)."""
     accum_w, accum_b = state.accum_w, state.accum_b
     if cfg.sga and cfg.quantized:
         g_th = sga_threshold(lr, cfg.weight_fmt)
@@ -193,6 +209,50 @@ def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
     return HeadState(w, b, accum_w, accum_b, key)
 
 
+def _epoch_step(state: HeadState, epoch: jax.Array, features_q: jax.Array,
+                labels_1hot: jax.Array, cfg: OnChipTrainConfig) -> HeadState:
+    """One full-batch epoch (the chip reads the whole 90-utterance set)."""
+    gw, gb, lr, key = epoch_grads(state, epoch, features_q, labels_1hot, cfg)
+    return apply_update(state, gw, gb, lr, key, cfg)
+
+
+def finetune_init(features: jax.Array, labels: jax.Array,
+                  w0: jax.Array, b0: jax.Array, cfg: OnChipTrainConfig,
+                  num_classes: Optional[int] = None
+                  ) -> Tuple[HeadState, jax.Array, jax.Array]:
+    """Quantize the feature buffer / initial head and build the optimizer
+    state.  Returns (state, features_q, labels_1hot) — feed them to
+    ``finetune_epochs`` (resumable: any chunking of the epoch range gives
+    the same final state as one monolithic run)."""
+    c = num_classes or w0.shape[-1]
+    labels_1hot = jax.nn.one_hot(labels, c)
+    feats = cfg.act_fmt.quantize(features) if cfg.quantized else features
+    w = cfg.weight_fmt.quantize(w0) if cfg.quantized else w0
+    b = cfg.weight_fmt.quantize(b0) if cfg.quantized else b0
+    state = HeadState(
+        w=w, b=b,
+        accum_w=jnp.zeros_like(w), accum_b=jnp.zeros_like(b),
+        key=jax.random.PRNGKey(cfg.seed),
+    )
+    return state, feats, labels_1hot
+
+
+def finetune_epochs(state: HeadState, features_q: jax.Array,
+                    labels_1hot: jax.Array, cfg: OnChipTrainConfig,
+                    start_epoch: int, num_epochs: int) -> HeadState:
+    """Run ``num_epochs`` full-batch epochs starting at ``start_epoch``.
+
+    The epoch index drives the LR schedule, so chunked calls
+    (0..k, k..n) compose bit-identically to one 0..n call — this is what
+    lets a scheduler tick run a bounded number of fine-tune steps and
+    resume next tick (repro.serving.customize)."""
+    def body(e, st):
+        return _epoch_step(st, e, features_q, labels_1hot, cfg)
+
+    return jax.lax.fori_loop(start_epoch, start_epoch + num_epochs, body,
+                             state)
+
+
 def quantized_head_finetune(features: jax.Array, labels: jax.Array,
                             w0: jax.Array, b0: jax.Array,
                             cfg: OnChipTrainConfig,
@@ -204,24 +264,13 @@ def quantized_head_finetune(features: jax.Array, labels: jax.Array,
     labels:   (N,) int class ids.
     Returns the fine-tuned (w, b) on the weight grid (or fp32 for the
     full-precision baseline).  Model-agnostic: works for the KWS GAP features
-    or any LM pooled hidden state.
+    or any LM pooled hidden state.  Equals ``finetune_init`` +
+    ``finetune_epochs(0, cfg.epochs)`` — the step-wise form the serving
+    enrollment sessions resume across scheduler ticks.
     """
-    c = num_classes or w0.shape[-1]
-    labels_1hot = jax.nn.one_hot(labels, c)
-    feats = cfg.act_fmt.quantize(features) if cfg.quantized else features
-    w = cfg.weight_fmt.quantize(w0) if cfg.quantized else w0
-    b = cfg.weight_fmt.quantize(b0) if cfg.quantized else b0
-
-    state = HeadState(
-        w=w, b=b,
-        accum_w=jnp.zeros_like(w), accum_b=jnp.zeros_like(b),
-        key=jax.random.PRNGKey(cfg.seed),
-    )
-
-    def body(e, st):
-        return _epoch_step(st, e, feats, labels_1hot, cfg)
-
-    state = jax.lax.fori_loop(0, cfg.epochs, body, state)
+    state, feats, labels_1hot = finetune_init(features, labels, w0, b0, cfg,
+                                              num_classes)
+    state = finetune_epochs(state, feats, labels_1hot, cfg, 0, cfg.epochs)
     return state.w, state.b
 
 

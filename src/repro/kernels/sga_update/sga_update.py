@@ -32,6 +32,57 @@ def _sga_kernel(w_ref, g_ref, a_ref, wo_ref, ao_ref, *,
     ao_ref[...] = new_a.astype(ao_ref.dtype)
 
 
+def _sga_rows_kernel(lr_ref, th_ref, w_ref, g_ref, a_ref, wo_ref, ao_ref, *,
+                     w_scale: float, w_max: float, a_scale: float):
+    """Row-batched variant: each grid row is one session's flattened
+    optimizer state with its OWN (lr, g_th) scalars — the learning-rate
+    schedule position differs per enrollment session, so the scalars ride
+    as operands instead of static compile-time constants."""
+    lr, g_th = lr_ref[0, 0], th_ref[0, 0]
+    w, g, a = w_ref[...], g_ref[...], a_ref[...]
+    small = jnp.abs(g) < g_th
+    banked = jnp.round((a + jnp.where(small, g, 0.0)) / a_scale) * a_scale
+    fire = small & (jnp.abs(banked) >= g_th)
+    g_upd = jnp.where(small, jnp.where(fire, banked, 0.0), g)
+    new_a = jnp.where(fire, 0.0, banked)
+    new_w = w - lr * g_upd
+    new_w = jnp.clip(jnp.round(new_w / w_scale) * w_scale, -w_max - w_scale,
+                     w_max)
+    wo_ref[...] = new_w.astype(wo_ref.dtype)
+    ao_ref[...] = new_a.astype(ao_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("w_scale", "w_max", "a_scale",
+                                             "block", "interpret"))
+def sga_update_rows(w: jax.Array, g: jax.Array, accum: jax.Array,
+                    lr: jax.Array, g_th: jax.Array, *,
+                    w_scale: float = 1.0 / 128, w_max: float = 127.0 / 128,
+                    a_scale: float = 2.0 ** -15, block: int = 1024,
+                    interpret: bool = True):
+    """Batched fused SGA update: one ``pallas_call`` for B sessions.
+
+    w/g/accum: (B, N) with N % block == 0 (ops.py pads); lr/g_th: (B,)
+    per-row scalars.  Row b transitions exactly like
+    ``sga_update(w[b], g[b], accum[b], lr=lr[b], g_th=g_th[b])`` — the
+    serving customization scheduler stacks every active session's
+    (head, bias, SGA bank) into rows so a mixed tick's optimizer work is
+    one launch regardless of how many users are enrolling."""
+    b, n = w.shape
+    kern = functools.partial(_sga_rows_kernel, w_scale=w_scale, w_max=w_max,
+                             a_scale=a_scale)
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    s_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
+    return pl.pallas_call(
+        kern, grid=(b, n // block),
+        in_specs=[s_spec, s_spec, spec, spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((b, n), w.dtype),
+                   jax.ShapeDtypeStruct((b, n), accum.dtype)),
+        interpret=interpret,
+    )(lr.reshape(b, 1).astype(jnp.float32),
+      g_th.reshape(b, 1).astype(jnp.float32), w, g, accum)
+
+
 @functools.partial(jax.jit, static_argnames=("lr", "g_th", "w_scale",
                                              "w_max", "a_scale", "block",
                                              "interpret"))

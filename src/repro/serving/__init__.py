@@ -9,22 +9,31 @@ leakage-only), a smoothed/hysteresis decision head, and a slot-based
 scheduler that batches many live streams into one fused-kernel launch per
 layer with dynamic hop widening and admission control.
 
-  stream.py     — hop geometry, per-stream ring state, init/step, the
-                  per-absolute-column SA-noise field, the gated (no-IMC)
-                  state advance, work accounting
+  stream.py     — hop geometry, per-stream ring state, init/step (+ the
+                  multi-hop step and the per-stream bias-delta/head
+                  riders), the per-absolute-column SA-noise field, the
+                  gated (no-IMC) state advance, work accounting
   vad.py        — log-energy EMA + hysteresis voice-activity detector
   decision.py   — posterior smoothing + hysteresis + refractory triggers
   scheduler.py  — StreamServer: slots, admission queue + backpressure,
                   batched hops, VAD gating + wake replay, dynamic hop,
                   slot autoscaling, eviction, latency/throughput stats
+  customize.py  — on-device customization as a serving workload:
+                  enrollment sessions, scheduler-ticked bias compensation
+                  + SGA fine-tuning, hot-swapped per-stream profiles
 
 Bit-exactness contracts: N hops of the streaming path equal ``hw_forward``
 on each full window — noise and chip-offset configurations included;
-``streaming=False`` falls back to exactly that recompute path; and gated
+``streaming=False`` falls back to exactly that recompute path; gated
 serving with the VAD forced to "speech" is bit-identical to ungated
-serving (silence never computes, so all-speech audio never gates).
+serving (silence never computes, so all-speech audio never gates); and a
+customization session driven through scheduler ticks equals the offline
+customize loop on the same utterances (compensated biases + fine-tuned
+head, SA-noise-free configurations).
 """
 
+from repro.serving.customize import (CustomizationResult,
+                                     CustomizationSession, CustomizeConfig)
 from repro.serving.decision import (DecisionConfig, DecisionOut,
                                     DecisionState, decision_init,
                                     decision_step)
@@ -34,17 +43,20 @@ from repro.serving.stream import (StreamEngine, StreamGeometry, StreamState,
                                   gated_step, gated_window_step,
                                   hop_alignment, hop_sa_noise_fields,
                                   make_stream_geometry, sa_noise_columns,
-                                  silence_fills, stream_init, stream_step,
+                                  silence_fills, stream_init,
+                                  stream_multi_step, stream_step,
                                   streaming_layer_stats, window_sa_noise)
 from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
                                vad_init, vad_step)
 
 __all__ = [
-    "AdmissionConfig", "DecisionConfig", "DecisionOut", "DecisionState",
+    "AdmissionConfig", "CustomizationResult", "CustomizationSession",
+    "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
     "DynamicHopConfig", "StreamServer", "StreamEngine", "StreamGeometry",
     "StreamState", "VADConfig", "VADState", "decision_init",
     "decision_step", "frame_energy_db", "gated_step", "gated_window_step",
     "hop_alignment", "hop_sa_noise_fields", "make_stream_geometry",
-    "sa_noise_columns", "silence_fills", "stream_init", "stream_step",
-    "streaming_layer_stats", "vad_init", "vad_step", "window_sa_noise",
+    "sa_noise_columns", "silence_fills", "stream_init", "stream_multi_step",
+    "stream_step", "streaming_layer_stats", "vad_init", "vad_step",
+    "window_sa_noise",
 ]

@@ -1,0 +1,540 @@
+"""On-device customization as a serving workload (paper §III, §V-C).
+
+The paper's headline capability — on-chip learning that recovers a
+personal speaker's accuracy (bias compensation + last-layer fine-tuning
+with error scaling and small-gradient accumulation) — deployed the way an
+always-on product ships it: as **enrollment sessions** against the live
+StreamServer (Cioflan et al., arXiv 2403.07802, frame exactly this
+on-device-learning-at-the-edge loop).
+
+A ``CustomizationSession`` attaches to a live stream and walks the
+paper's pipeline as scheduler-ticked background jobs:
+
+1. **enrollment** — labeled user utterances are submitted into the
+   attached stream and ride its normal batched hops (the per-stream
+   carries + GAP ring); at each utterance's completion hop the session
+   captures the GAP feature vector straight from the stream state — the
+   §V-C SRAM feature buffer, recorded with ZERO extra forward passes;
+2. **calibration / bias compensation** (§IV-B) — the chip's test mode
+   over the recorded utterances, one bounded chunk of layers per tick
+   (``repro.training.kws.calibration_ideal_counts`` /
+   ``compensate_layer_bias`` — the same pieces the offline driver runs);
+3. **feature re-extraction** — compensation changed the IMC biases, so
+   the feature buffer is recomputed by replaying the recorded windows as
+   *internal replay streams* through the scheduler: the replays ride the
+   SAME one-fused-launch-per-layer batched hop as the inference streams
+   (their compensated biases ride the per-slot bias-delta operand), so a
+   mixed inference+learning tick still issues exactly one fused-kernel
+   launch per IMC layer — test-enforced;
+4. **fine-tuning** (§III) — the quantized last-layer loop (error scaling
+   + SGA) runs a bounded number of epochs per tick; every active
+   session's optimizer transition is stacked into ONE batched
+   ``sga_update`` kernel launch (``repro.kernels.sga_update.ops
+   .sga_update_batch`` — per-row learning rates, since sessions sit at
+   different points of the LR schedule);
+5. **hot swap** — the finished profile (compensated biases + fine-tuned
+   head) is written into the attached stream's per-slot rider rows
+   (bias delta, FC head, silence fill); other slots' rows and states are
+   untouched.  ``session.refolded()`` returns the equivalent
+   ``PackedHWParams`` for persistence, and
+   ``StreamServer.install_custom`` re-installs a saved profile.
+
+**Equivalence contract** (test-enforced, SA-noise-free configurations —
+chip offsets included): the session's compensated biases and fine-tuned
+(w, b) are bit-identical to the offline loop on the same recorded
+utterances (``calibrate_and_compensate`` -> ``hw_features`` ->
+``quantized_head_finetune``).  Everything in the streaming path that the
+session touches is exact on the fixed-point grids: the bias delta is an
+integer rider on the pre-sign operand, and the GAP/FC math has no
+float rounding (±1 ring sums and Q1.3.4 x Q1.7 dot products are exactly
+representable), so the per-slot head matvec equals the shared matmul
+bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy
+from repro.core.onchip_training import (HeadState, OnChipTrainConfig,
+                                        apply_update, epoch_grads,
+                                        finetune_init, head_accuracy,
+                                        sga_threshold)
+from repro.core.quantize import ACT_Q
+from repro.models import kws
+from repro.serving import stream as sv
+from repro.training import kws as tr
+
+
+@dataclasses.dataclass(frozen=True)
+class CustomizeConfig:
+    """Knobs of one enrollment session.
+
+    ``train`` is the paper's on-chip loop config (epochs, LR schedule,
+    error scaling, SGA, RGP).  The default uses the CHIP's error-scaling
+    mode — the fixed shift-add-friendly 1.375 factor (§V-C) — rather than
+    the dynamic Eq-2 exponent: the dynamic ceil always lands the largest
+    error at/above the Q1.7 rail, which can stall learning on weakly
+    separated features, while the silicon's fixed factor recovers cleanly
+    (see benchmarks/run.py --customize).  ``epochs_per_tick`` /
+    ``layers_per_tick`` bound the work one scheduler tick may spend on
+    this session;
+    ``compensate`` runs the §IV-B test-mode bias compensation before
+    fine-tuning (skips straight to fine-tuning on the enrollment features
+    when off — no re-extraction needed, the biases did not change);
+    ``use_kernel`` routes the optimizer transition through the fused
+    ``sga_update`` Pallas kernel (bit-identical to the jnp path);
+    ``auto_swap`` hot-swaps the result into the attached stream the tick
+    fine-tuning finishes."""
+
+    train: OnChipTrainConfig = OnChipTrainConfig(epochs=200,
+                                                 fixed_error_scale=1.375)
+    epochs_per_tick: int = 10
+    layers_per_tick: int = 2
+    compensate: bool = True
+    calib_sa_noise_std: float = 1.0
+    calib_seed: int = 0
+    use_kernel: bool = True
+    auto_swap: bool = True
+
+    def __post_init__(self):
+        if self.epochs_per_tick < 1 or self.layers_per_tick < 1:
+            raise ValueError("epochs_per_tick and layers_per_tick must "
+                             "be >= 1")
+
+
+@dataclasses.dataclass
+class CustomizationResult:
+    """A finished user profile: full compensated integer biases for the
+    IMC layers, the fine-tuned Q1.7 head, and the run's accounting."""
+
+    bias: Dict[str, np.ndarray]
+    fc_w: np.ndarray
+    fc_b: np.ndarray
+    epochs: int
+    n_utterances: int
+    history: List[dict]
+    energy: dict
+
+
+def result_riders(result: CustomizationResult, hw, cfg: kws.KWSConfig,
+                  chip_offsets=None, with_fills: bool = False) -> dict:
+    """Translate a result into the scheduler's per-slot riders: integer
+    bias deltas vs the base chip, the replacement head, and (for gated
+    servers) the compensated net's silence-fill columns."""
+    hwp, _ = kws.as_hw_params(hw)
+    delta = {name: np.asarray(result.bias[name])
+             - np.asarray(hwp.bias[name])
+             for name in cfg.imc_layer_names()}
+    out = {"delta": delta,
+           "head": (np.asarray(result.fc_w), np.asarray(result.fc_b)),
+           "fills": None}
+    if with_fills:
+        hw_c = refold(result, hw, cfg, pack=False)
+        sils = kws.silence_columns(hw_c, cfg, chip_offsets=chip_offsets)
+        out["fills"] = tuple(np.asarray(f)
+                             for f in sv.silence_fills(cfg, sils))
+    return out
+
+
+def refold(result: CustomizationResult, hw, cfg: kws.KWSConfig,
+           pack: bool = True):
+    """The customized model as ordinary (Packed)HWParams: base binary
+    weights, compensated biases, fine-tuned head — what a dedicated
+    engine would serve, and what the hot-swapped slot must match
+    bit-for-bit (SA-noise-free)."""
+    hwp, _ = kws.as_hw_params(hw)
+    bias = dict(hwp.bias)
+    for name in cfg.imc_layer_names():
+        bias[name] = jnp.asarray(result.bias[name])
+    out = hwp._replace(bias=bias, fc_w=jnp.asarray(result.fc_w),
+                       fc_b=jnp.asarray(result.fc_b))
+    return kws.pack_hw_params(out, cfg) if pack else out
+
+
+class CustomizationSession:
+    """One user's enrollment/fine-tuning session (created by
+    ``StreamServer.customize``).  Drive it by calling ``enroll`` for each
+    labeled utterance, then ``finish_enrollment()``; the server's
+    ``step()`` loop does the rest in the background.  ``phase`` walks
+    enrolling -> calibrating -> extracting -> training -> ready ->
+    swapped (compensation off skips calibrating/extracting)."""
+
+    def __init__(self, manager: "CustomizationManager", sid: int,
+                 stream_id: str, ccfg: CustomizeConfig):
+        self._mgr = manager
+        self.sid = sid
+        self.stream_id = stream_id
+        self.ccfg = ccfg
+        self.phase = "enrolling"
+        self.windows: List[np.ndarray] = []      # recorded utterance windows
+        self.labels: List[int] = []
+        self.features: List[Optional[np.ndarray]] = []
+        self.history: List[dict] = []
+        self.result: Optional[CustomizationResult] = None
+        self._enroll_done = False
+        self._captures: List[dict] = []
+        self._total = 0                          # stream sample position
+        self._ideal = None                       # calibration state
+        self._calib_keys = None
+        self._new_bias = None
+        self._calib_idx = 0
+        self._replays_spawned = False
+        self._head: Optional[HeadState] = None   # fine-tune state
+        self._featsq = None
+        self._onehot = None
+        self._epoch = 0
+        self._grads_fn = None
+
+    # -- enrollment ---------------------------------------------------------
+
+    def enroll(self, label: int, utterance: np.ndarray) -> None:
+        """Submit one labeled utterance (exactly one decision window of
+        audio) into the attached stream.  The submission is pre-padded
+        with silence so the utterance's last sample lands on a hop
+        boundary: the stream window at the completion hop IS the
+        utterance, and the capture rides the normal batched hops."""
+        if self.phase != "enrolling":
+            raise ValueError(f"session is {self.phase}, not enrolling")
+        srv = self._mgr.srv
+        window = srv.geom.window
+        utterance = np.asarray(utterance, np.float32)
+        if utterance.shape != (window,):
+            raise ValueError(f"utterance must be one window "
+                             f"({window} samples), got {utterance.shape}")
+        hop = srv.geom.hop
+        pad = (-self._total) % hop
+        wav = (np.concatenate([np.zeros((pad,), np.float32), utterance])
+               if pad else utterance)
+        srv.submit(self.stream_id, wav)
+        self._total += pad + window
+        self.windows.append(utterance.copy())
+        self.labels.append(int(label))
+        self.features.append(None)
+        self._captures.append({"stream": self.stream_id,
+                               "target": self._total,
+                               "index": len(self.windows) - 1,
+                               "kind": "enroll"})
+
+    def finish_enrollment(self) -> None:
+        if not self.windows:
+            raise ValueError("enroll at least one utterance first")
+        self._enroll_done = True
+
+    # -- results ------------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self.phase in ("ready", "swapped")
+
+    def refolded(self, pack: bool = True):
+        if self.result is None:
+            raise ValueError("session not finished")
+        return refold(self.result, self._mgr.srv._hw, self._mgr.srv.cfg,
+                      pack=pack)
+
+
+class CustomizationManager:
+    """Per-server registry of sessions + the background-job engine the
+    scheduler ticks (captures, calibration chunks, replay spawns, batched
+    fine-tune epochs, hot swaps)."""
+
+    def __init__(self, srv):
+        if not srv.streaming:
+            raise ValueError("customization requires streaming=True (the "
+                             "feature captures read the GAP ring)")
+        self.srv = srv
+        self.sessions: List[CustomizationSession] = []
+        self._next_sid = 0
+
+    # -- session lifecycle --------------------------------------------------
+
+    def start(self, stream_id: str,
+              ccfg: Optional[CustomizeConfig]) -> CustomizationSession:
+        ccfg = ccfg or CustomizeConfig()
+        for s in self.sessions:
+            if s.stream_id == stream_id and not s.done:
+                raise ValueError(f"stream {stream_id} already has an "
+                                 f"active session ({s.phase})")
+        srv = self.srv
+        rec = srv._streams.get(stream_id)
+        if rec is None:
+            if srv.submit(stream_id, np.zeros((0,), np.float32)) \
+                    == "rejected":
+                raise RuntimeError(
+                    f"cannot open a session for {stream_id}: the "
+                    f"admission queue is full (backpressure) — retry "
+                    f"when a slot frees")
+            rec = srv._streams[stream_id]
+        rec.force_compute = True           # enrollment hops never gate
+        sess = CustomizationSession(self, self._next_sid, stream_id, ccfg)
+        sess._total = rec.consumed + len(rec.buf) + sum(
+            map(len, rec.pending))
+        self._next_sid += 1
+        self.sessions.append(sess)
+        return sess
+
+    # -- per-tick hooks (called by StreamServer.step) -----------------------
+
+    def on_step(self, srv) -> None:
+        """Feature captures: runs right after the batched hop, before
+        slots retire, so the GAP ring still holds the completion window's
+        activations."""
+        for sess in self.sessions:
+            for cap in list(sess._captures):
+                rec = srv._streams.get(cap["stream"])
+                if (rec is None or rec.slot is None or not rec.initialized
+                        or rec.consumed < cap["target"]):
+                    continue
+                if rec.consumed > cap["target"]:
+                    raise RuntimeError(
+                        f"capture overshoot on {cap['stream']}: consumed "
+                        f"{rec.consumed} > target {cap['target']} — was "
+                        f"the stream shed or retargeted mid-enrollment?")
+                ring = srv._state.ring[rec.slot]
+                feats = np.asarray(ACT_Q.quantize(jnp.mean(ring, axis=0)),
+                                   np.float32)
+                sess.features[cap["index"]] = feats
+                if cap["kind"] == "enroll":
+                    sess.windows[cap["index"]] = rec.recent.copy()
+                else:                      # replay stream: single-use
+                    srv._drop_internal(cap["stream"])
+                sess._captures.remove(cap)
+
+    def tick(self, srv) -> None:
+        """Advance every session by a bounded amount of background work."""
+        for sess in self.sessions:
+            if sess.phase == "enrolling":
+                if sess._enroll_done and not sess._captures:
+                    if sess.ccfg.compensate:
+                        sess.phase = "calibrating"
+                    else:
+                        self._start_training(sess, base_bias=True)
+            elif sess.phase == "calibrating":
+                self._calibrate_chunk(sess)
+            elif sess.phase == "extracting":
+                self._extract(sess)
+        self._train_round()
+        for sess in self.sessions:
+            if sess.phase == "ready" and sess.ccfg.auto_swap:
+                self.swap(sess)
+
+    # -- calibration / bias compensation ------------------------------------
+
+    def _calibrate_chunk(self, sess: CustomizationSession) -> None:
+        srv, cfg = self.srv, self.srv.cfg
+        hwp, _ = kws.as_hw_params(srv._hw)
+        if sess._ideal is None:
+            # tick 1: the test-mode reference forward over the recorded
+            # utterances (collect_counts — unfused by construction, like
+            # the silicon's digitize-the-counts mode: zero IMC launches)
+            sess._ideal = tr.calibration_ideal_counts(
+                srv._hw, np.stack(sess.windows), cfg)
+            sess._calib_keys = tr.calibration_layer_keys(
+                cfg, sess.ccfg.calib_seed)
+            sess._new_bias = {k: np.asarray(v)
+                              for k, v in hwp.bias.items()}
+            return
+        offs = srv._engine_kw["chip_offsets"] or {}
+        names = cfg.imc_layer_names()
+        for name in names[sess._calib_idx:
+                          sess._calib_idx + sess.ccfg.layers_per_tick]:
+            off = offs.get(name)
+            if off is None:
+                off = jnp.zeros((sess._ideal[name].shape[-1],))
+            sess._new_bias[name] = np.asarray(tr.compensate_layer_bias(
+                jnp.asarray(sess._new_bias[name]), sess._ideal[name], off,
+                sess._calib_keys[name], sess.ccfg.calib_sa_noise_std))
+        sess._calib_idx += sess.ccfg.layers_per_tick
+        if sess._calib_idx >= len(names):
+            sess._ideal = None             # free the counts log
+            sess.features = [None] * len(sess.windows)
+            sess.phase = "extracting"
+
+    # -- feature re-extraction under the compensated biases ------------------
+
+    def _extract(self, sess: CustomizationSession) -> None:
+        srv = self.srv
+        if not sess._replays_spawned:
+            hwp, _ = kws.as_hw_params(srv._hw)
+            delta = {name: sess._new_bias[name] - np.asarray(hwp.bias[name])
+                     for name in srv.cfg.imc_layer_names()}
+            head = (np.asarray(hwp.fc_w), np.asarray(hwp.fc_b))
+            hop, window = srv.geom.hop, srv.geom.window
+            for j, win in enumerate(sess.windows):
+                sid = f"~cust{sess.sid}u{j}"
+                wav = np.concatenate([np.zeros((hop,), np.float32), win])
+                srv._submit_internal(sid, wav,
+                                     custom={"delta": delta, "head": head,
+                                             "fills": None})
+                # init consumes the window [silence-hop, win[:-hop]]; one
+                # batched hop later the state window is exactly ``win``
+                sess._captures.append({"stream": sid,
+                                       "target": window + hop,
+                                       "index": j, "kind": "replay"})
+            sess._replays_spawned = True
+            return
+        if not sess._captures:
+            self._start_training(sess, base_bias=False)
+
+    # -- fine-tuning ----------------------------------------------------------
+
+    def _start_training(self, sess: CustomizationSession,
+                        base_bias: bool) -> None:
+        hwp, _ = kws.as_hw_params(self.srv._hw)
+        if base_bias:
+            sess._new_bias = {k: np.asarray(v) for k, v in hwp.bias.items()}
+        feats = np.stack(sess.features)
+        labels = np.asarray(sess.labels, np.int32)
+        state, featsq, onehot = finetune_init(
+            jnp.asarray(feats), jnp.asarray(labels), hwp.fc_w, hwp.fc_b,
+            sess.ccfg.train, num_classes=self.srv.cfg.num_classes)
+        sess._head, sess._featsq, sess._onehot = state, featsq, onehot
+        sess._epoch = 0
+        sess.phase = "training"
+
+    def _train_round(self) -> None:
+        """Run each training session's bounded epoch budget for this tick.
+        Within every round, all kernel-eligible sessions' optimizer
+        transitions are stacked into ONE batched ``sga_update`` launch
+        (per-row lr/G_th — each session sits at its own schedule point)."""
+        import jax
+
+        active = [s for s in self.sessions if s.phase == "training"]
+        if not active:
+            return
+        budget = {s.sid: min(s.ccfg.epochs_per_tick,
+                             s.ccfg.train.epochs - s._epoch)
+                  for s in active}
+        for r in range(max(budget.values())):
+            batch = [s for s in active if r < budget[s.sid]]
+            if not batch:
+                break
+            grads = []
+            for s in batch:
+                if s._grads_fn is None:
+                    tcfg, fq, oh = s.ccfg.train, s._featsq, s._onehot
+                    s._grads_fn = jax.jit(
+                        lambda st, e, _t=tcfg, _f=fq, _o=oh:
+                        epoch_grads(st, e, _f, _o, _t))
+                grads.append(s._grads_fn(s._head,
+                                         jnp.asarray(s._epoch, jnp.int32)))
+            # one fused launch per (weight, accum) format group — formats
+            # set the kernel's quantization grids, so sessions with
+            # different OnChipTrainConfig formats cannot share rows
+            fmt_groups: Dict[tuple, List[int]] = {}
+            for i, s in enumerate(batch):
+                if (s.ccfg.use_kernel and s.ccfg.train.quantized
+                        and s.ccfg.train.sga):
+                    fmt = (s.ccfg.train.weight_fmt, s.ccfg.train.accum_fmt)
+                    fmt_groups.setdefault(fmt, []).append(i)
+            kernel_rows = {i for idx in fmt_groups.values() for i in idx}
+            for idx in fmt_groups.values():
+                self._kernel_update([batch[i] for i in idx],
+                                    [grads[i] for i in idx])
+            for i, s in enumerate(batch):
+                if i in kernel_rows:
+                    continue
+                gw, gb, lr, key = grads[i]
+                s._head = apply_update(s._head, gw, gb, lr, key,
+                                       s.ccfg.train)
+            for s in batch:
+                s._epoch += 1
+        for s in active:
+            if budget[s.sid] > 0:
+                acc = float(head_accuracy(s._featsq,
+                                          jnp.asarray(s.labels),
+                                          s._head.w, s._head.b,
+                                          s.ccfg.train))
+                s.history.append({"epoch": s._epoch,
+                                  "train_accuracy": acc})
+            if s._epoch >= s.ccfg.train.epochs:
+                self._finish(s)
+
+    def _kernel_update(self, sessions, grads) -> None:
+        """One fused ``sga_update`` launch for every session row: flatten
+        each session's [fc_w, fc_b] (and its SGA banks) into one row,
+        apply Algorithm 1 + the SGD step + Q1.7 quantization elementwise,
+        unpack.  Bit-identical to the jnp ``apply_update`` path on the
+        fixed-point grids."""
+        from repro.kernels.sga_update import ops as sga_ops
+
+        tcfg0 = sessions[0].ccfg.train
+        rows_w, rows_g, rows_a, lrs, gths = [], [], [], [], []
+        shapes = []
+        for s, (gw, gb, lr, key) in zip(sessions, grads):
+            st = s._head
+            shapes.append((st.w.shape, st.b.shape))
+            rows_w.append(jnp.concatenate([st.w.ravel(), st.b.ravel()]))
+            rows_g.append(jnp.concatenate([gw.ravel(), gb.ravel()]))
+            rows_a.append(jnp.concatenate([st.accum_w.ravel(),
+                                            st.accum_b.ravel()]))
+            lrs.append(lr)
+            gths.append(sga_threshold(lr, s.ccfg.train.weight_fmt))
+        fmt_w, fmt_a = tcfg0.weight_fmt, tcfg0.accum_fmt
+        nw, na = sga_ops.sga_update_batch(
+            jnp.stack(rows_w), jnp.stack(rows_g), jnp.stack(rows_a),
+            jnp.stack(lrs), jnp.stack(gths),
+            w_scale=fmt_w.scale, w_max=fmt_w.max_value,
+            a_scale=fmt_a.scale)
+        for i, (s, (gw, gb, lr, key)) in enumerate(zip(sessions, grads)):
+            (ws, bs) = shapes[i]
+            nw_i, na_i = nw[i], na[i]
+            n_w = int(np.prod(ws))
+            s._head = HeadState(
+                w=nw_i[:n_w].reshape(ws),
+                b=nw_i[n_w:n_w + int(np.prod(bs))].reshape(bs),
+                accum_w=na_i[:n_w].reshape(ws),
+                accum_b=na_i[n_w:n_w + int(np.prod(bs))].reshape(bs),
+                key=key)
+
+    def _finish(self, sess: CustomizationSession) -> None:
+        d = int(sess._featsq.shape[1])
+        c = self.srv.cfg.num_classes
+        e = energy.customization_energy_summary(
+            n_utts=len(sess.windows), feat_dim=d, num_classes=c,
+            epochs=sess.ccfg.train.epochs)
+        sess.result = CustomizationResult(
+            bias={k: np.asarray(v) for k, v in sess._new_bias.items()},
+            fc_w=np.asarray(sess._head.w), fc_b=np.asarray(sess._head.b),
+            epochs=sess._epoch, n_utterances=len(sess.windows),
+            history=list(sess.history), energy=e)
+        sess.phase = "ready"
+
+    # -- hot swap -------------------------------------------------------------
+
+    def swap(self, sess: CustomizationSession) -> None:
+        """Write the finished profile into the attached stream's slot
+        riders (bias delta + head + silence fill).  Only that slot's rows
+        change; every other slot — state, decisions, riders — is
+        untouched."""
+        if sess.result is None:
+            raise ValueError("session not finished")
+        srv = self.srv
+        rec = srv._streams.get(sess.stream_id)
+        riders = result_riders(sess.result, srv._hw, srv.cfg,
+                               chip_offsets=srv._engine_kw["chip_offsets"],
+                               with_fills=srv._fills is not None)
+        if rec is not None:
+            rec.custom = riders
+            rec.force_compute = False      # normal VAD gating resumes
+            if rec.slot is not None:
+                srv._write_slot_custom(rec.slot, riders)
+        sess.phase = "swapped"
+
+    # -- accounting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "sessions": [
+                {"stream": s.stream_id, "phase": s.phase,
+                 "utterances": len(s.windows), "epoch": s._epoch,
+                 "train_accuracy": (s.history[-1]["train_accuracy"]
+                                    if s.history else None)}
+                for s in self.sessions
+            ],
+        }

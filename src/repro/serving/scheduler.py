@@ -10,8 +10,12 @@ one fused ``pallas_call`` per IMC layer for the whole fleet of streams,
 the M-tiling of the fused kernel amortizing the weight-stationary packs
 across streams.  Slots that are not ready this step ride along masked
 (their state is restored verbatim; their logits are ignored), so the
-launch count is independent of readiness.  The only exception is a wake
-replay (below), which issues extra full-stack hops for one slot.
+launch count is independent of readiness.  This includes learning work:
+a customization session's replay hops (repro.serving.customize) are just
+rows of the same batch, and hot-swapped slots' compensated biases /
+fine-tuned heads ride per-slot operands of the same launch.  A wake
+replay (below) adds one extra multi-hop launch per layer for the waking
+slot — the whole deferred run in one call, not one per deferred hop.
 
 **Voice-activity gating** (``vad=VADConfig(...)``): each hop of each
 stream is first classified speech/silence by the cheap digital energy
@@ -19,9 +23,11 @@ detector (repro.serving.vad).  Silent hops launch NO IMC kernels:
 
 * the last ``wake_margin`` silent hops are *deferred* — buffered host-side
   with the jax state untouched — so a speech onset replays them through
-  the real IMC path and a keyword straddling the silence->speech edge
-  keeps its prefix (if the silent run never exceeds the margin, the gated
-  decision sequence is bit-identical to ungated streaming);
+  the real IMC path (ONE multi-hop launch per layer for the whole
+  deferred run, bit-identical to replaying hop by hop) and a keyword
+  straddling the silence->speech edge keeps its prefix (if the silent run
+  never exceeds the margin, the gated decision sequence is bit-identical
+  to ungated streaming);
 * silent hops older than the margin are *gated*: the state advances by a
   masked no-op column fill (``stream.gated_step`` — each layer's constant
   silence response shifts into the carries and the GAP ring), charged
@@ -58,11 +64,19 @@ evicted when its producer calls ``finish()`` and its buffer drains (or
 explicitly via ``evict()``).  Admission runs the stream's first full
 window (``stream_init``) and scatters the result into the slot.
 
+**Customization** (``customize(stream_id)`` / ``install_custom``): an
+enrollment/fine-tuning session (repro.serving.customize) rides the same
+machinery — enrollment hops on the live stream, calibration + SGA
+fine-tune as bounded background jobs per tick, feature-replay streams as
+internal slots of the same batch, and the finished profile hot-swapped
+into the stream's per-slot rider rows (bias delta + FC head + silence
+fill) without touching other slots.
+
 Per-hop logits flow into the shared decision head
 (repro.serving.decision): smoothing + hysteresis + refractory, batched and
 mask-aware.  ``stats()`` reports per-stream and aggregate decisions/sec,
-hop latency, duty cycle, shed/reject counts and the gated analytical
-uJ/decision.
+hop latency, duty cycle, shed/reject counts, the gated analytical
+uJ/decision and per-session customization progress.
 """
 
 from __future__ import annotations
@@ -159,6 +173,18 @@ class _Stream:
     gated_hops: int = 0                   # fill-advanced (no-compute) hops
     sheds: int = 0
     shed_samples: int = 0
+    # -- customization (repro.serving.customize) --------------------------
+    internal: bool = False                # session-owned replay stream: no
+    #                                       decision events, no admission
+    #                                       bookkeeping, exempt from SLO
+    force_compute: bool = False           # bypass VAD gating (enrollment /
+    #                                       replay hops must run the IMC
+    #                                       path so captures stay exact)
+    consumed: int = 0                     # samples advanced through the
+    #                                       stream state (capture targets)
+    custom: Optional[dict] = None         # per-stream riders: {"delta":
+    #                                       {conv_i: (C_i,)}, "head":
+    #                                       (fc_w, fc_b), "fills": tuple}
 
 
 def _select_state(mask: jax.Array, new, old):
@@ -214,6 +240,17 @@ class StreamServer:
             sils = kws.silence_columns(hw, cfg, chip_offsets=chip_offsets)
             self._fills = sv.silence_fills(cfg, sils)
 
+        # customization (repro.serving.customize): once enabled, batched
+        # hops route through the per-slot (bias delta, FC head) variant so
+        # hot-swapped and learning slots share the one-launch-per-layer
+        # batch with everyone else
+        self._cust = None                 # CustomizationManager
+        self._cust_on = False
+        self._slot_delta = None           # {conv_i: (slots, C_i)}
+        self._slot_head_w = None          # (slots, D, num_classes)
+        self._slot_head_b = None          # (slots, num_classes)
+        self._slot_fills = None           # per-layer (slots, C_i) if VAD
+
         self._mult = 1
         self._mults: Dict[int, dict] = {}
         bundle = self._bundle(1)
@@ -230,6 +267,7 @@ class StreamServer:
         self._decisions = 0
         self._speech_hops = 0
         self._gated_hops = 0
+        self._learn_hops = 0
         self._rejected = 0
         self._shed_events = 0
         self._shed_samples = 0
@@ -260,18 +298,64 @@ class StreamServer:
                 logits, new_state = _step(state, audio)
                 return logits, _select_state(mask, new_state, state)
 
+            step_fn = sv.stream_step if self.streaming else sv.window_step
+
+            def hop_cust_masked(state, audio, mask, deltas, hw_, hb_,
+                                _kw=eng._kw, _geom=eng.geom):
+                logits, new_state = step_fn(self._hw, state, audio, self.cfg,
+                                            _geom, **_kw, bias_delta=deltas,
+                                            head_w=hw_, head_b=hb_)
+                return logits, _select_state(mask, new_state, state)
+
             if self.streaming:
                 def gate_masked(state, mask, _geom=eng.geom):
                     new = sv.gated_step(state, self.cfg, _geom, self._fills)
+                    return _select_state(mask, new, state)
+
+                def gate_cust_masked(state, mask, fills, _geom=eng.geom):
+                    new = sv.gated_step(state, self.cfg, _geom, fills)
                     return _select_state(mask, new, state)
             else:
                 def gate_masked(state, mask, _geom=eng.geom):
                     new = sv.gated_window_step(state, _geom)
                     return _select_state(mask, new, state)
 
+                def gate_cust_masked(state, mask, fills, _geom=eng.geom):
+                    new = sv.gated_window_step(state, _geom)
+                    return _select_state(mask, new, state)
+
             self._mults[mult] = {"engine": eng, "hop": jax.jit(hop_masked),
-                                 "gate": jax.jit(gate_masked)}
+                                 "hop_cust": jax.jit(hop_cust_masked),
+                                 "gate": jax.jit(gate_masked),
+                                 "gate_cust": jax.jit(gate_cust_masked),
+                                 "replay": {}, "replay_cust": {}}
         return self._mults[mult]
+
+    def _replay_fn(self, bundle: dict, n_hops: int, cust: bool):
+        """Masked multi-hop replay for one deferred-run length: ONE fused
+        launch per IMC layer for the whole n-hop run (streaming mode; the
+        recompute fallback loops internally) instead of one launch per
+        deferred hop.  Jitted per (hop-multiple, n_hops, cust)."""
+        cache = bundle["replay_cust" if cust else "replay"]
+        if n_hops not in cache:
+            eng = bundle["engine"]
+            multi_fn = (sv.stream_multi_step if self.streaming
+                        else sv.window_multi_step)
+            if cust:
+                def replay(state, audio, mask, deltas, hw_, hb_,
+                           _kw=eng._kw, _geom=eng.geom):
+                    logits, new_state = multi_fn(
+                        self._hw, state, audio, self.cfg, _geom, n_hops,
+                        **_kw, bias_delta=deltas, head_w=hw_, head_b=hb_)
+                    return logits, _select_state(mask, new_state, state)
+            else:
+                def replay(state, audio, mask, _kw=eng._kw, _geom=eng.geom):
+                    logits, new_state = multi_fn(self._hw, state, audio,
+                                                 self.cfg, _geom, n_hops,
+                                                 **_kw)
+                    return logits, _select_state(mask, new_state, state)
+            cache[n_hops] = jax.jit(replay)
+        return cache[n_hops]
 
     @property
     def engine(self) -> sv.StreamEngine:
@@ -289,6 +373,137 @@ class StreamServer:
     @property
     def hop_multiplier(self) -> int:
         return self._mult
+
+    # -- customization: per-slot riders + session manager -------------------
+
+    def _base_head(self):
+        hwp, _ = kws.as_hw_params(self._hw)
+        return hwp.fc_w, hwp.fc_b
+
+    def _enable_customization(self) -> None:
+        """Materialize the per-slot customization arrays (zero bias deltas,
+        the base FC head in every row) and route batched hops through the
+        per-slot variant from now on.  Rows with base values are bit-exact
+        no-ops, so uncustomized slots are unaffected."""
+        if self._cust_on:
+            return
+        self._cust_on = True
+        n = self.slots
+        cfg = self.cfg
+        fw, fb = self._base_head()
+        self._slot_delta = {
+            f"conv{i}": jnp.zeros((n, cfg.channels[i]))
+            for i in range(1, cfg.num_conv_layers)}
+        self._slot_head_w = jnp.broadcast_to(fw, (n,) + fw.shape)
+        self._slot_head_b = jnp.broadcast_to(fb, (n,) + fb.shape)
+        if self._fills is not None:
+            self._slot_fills = tuple(
+                jnp.broadcast_to(f, (n,) + f.shape) for f in self._fills)
+        for s, rec in enumerate(self._slots):
+            if rec is not None and rec.custom is not None:
+                self._write_slot_custom(s, rec.custom)
+
+    def _write_slot_custom(self, s: int, custom: Optional[dict]) -> None:
+        """Sync slot ``s``'s rider rows with a stream's customization
+        (``None`` resets to base).  Called on admission, eviction and
+        hot-swap — the swap touches only row ``s``, other slots' rows (and
+        their carries/rings) are untouched."""
+        if not self._cust_on:
+            return
+        fw, fb = self._base_head()
+        if custom is None:
+            for name in self._slot_delta:
+                self._slot_delta[name] = self._slot_delta[name].at[s].set(0.0)
+            self._slot_head_w = self._slot_head_w.at[s].set(fw)
+            self._slot_head_b = self._slot_head_b.at[s].set(fb)
+            if self._slot_fills is not None:
+                self._slot_fills = tuple(
+                    t.at[s].set(f) for t, f in zip(self._slot_fills,
+                                                   self._fills))
+            return
+        for name in self._slot_delta:
+            self._slot_delta[name] = self._slot_delta[name].at[s].set(
+                jnp.asarray(custom["delta"][name]))
+        self._slot_head_w = self._slot_head_w.at[s].set(
+            jnp.asarray(custom["head"][0]))
+        self._slot_head_b = self._slot_head_b.at[s].set(
+            jnp.asarray(custom["head"][1]))
+        if self._slot_fills is not None and custom.get("fills") is not None:
+            self._slot_fills = tuple(
+                t.at[s].set(jnp.asarray(f))
+                for t, f in zip(self._slot_fills, custom["fills"]))
+
+    def _slot_custom_args(self):
+        return (self._slot_delta, self._slot_head_w, self._slot_head_b)
+
+    def customize(self, stream_id: str, ccfg=None):
+        """Open an enrollment/fine-tuning session attached to a live
+        stream (created empty if absent): labeled utterances submitted via
+        ``session.enroll`` ride the stream's normal batched hops, then the
+        paper's on-chip loop (bias compensation -> error-scaled + SGA
+        fine-tune) runs as bounded background jobs inside ``step()``.  See
+        repro.serving.customize.  Returns the CustomizationSession."""
+        from repro.serving import customize as cz
+        if self.hcfg is not None:
+            raise ValueError("customization requires a fixed hop "
+                             "(dynamic_hop retargets would break the "
+                             "enrollment capture alignment)")
+        if self._cust is None:
+            self._cust = cz.CustomizationManager(self)
+        self._enable_customization()
+        return self._cust.start(stream_id, ccfg)
+
+    def install_custom(self, stream_id: str, result) -> None:
+        """Hot-swap a finished customization (a CustomizationResult — e.g.
+        a persisted user profile) into a stream: its slot's bias-delta /
+        FC-head / silence-fill rows are reprogrammed in place; every other
+        slot's rows and states are untouched.  The stream is created
+        (empty) if it does not exist yet, so a profile can be installed
+        before its first audio arrives."""
+        from repro.serving import customize as cz
+        self._enable_customization()
+        rec = self._streams.get(stream_id)
+        if rec is None:
+            rec = _Stream(stream_id=stream_id, uid=self._uid,
+                          buf=np.zeros((0,), np.float32))
+            self._uid += 1
+            self._streams[stream_id] = rec
+            self._queue.append(rec)
+            self._try_admit()
+        rec.custom = cz.result_riders(result, self._hw, self.cfg,
+                                      chip_offsets=self._engine_kw
+                                      ["chip_offsets"],
+                                      with_fills=self._fills is not None)
+        if rec.slot is not None:
+            self._write_slot_custom(rec.slot, rec.custom)
+
+    def _submit_internal(self, stream_id: str, wav: np.ndarray,
+                         custom: Optional[dict] = None) -> "_Stream":
+        """Enqueue a session-owned replay stream: rides the normal slot
+        machinery and the SAME batched launches, but emits no decision
+        events, bypasses the admission-queue bound and is exempt from SLO
+        shedding.  Finished on arrival — it retires as soon as its audio
+        drains (the session captures its features first)."""
+        rec = _Stream(stream_id=stream_id, uid=self._uid,
+                      buf=np.asarray(wav, np.float32), internal=True,
+                      force_compute=True, custom=custom, finished=True)
+        self._uid += 1
+        self._streams[stream_id] = rec
+        self._queue.append(rec)
+        self._try_admit()
+        return rec
+
+    def _drop_internal(self, stream_id: str) -> None:
+        rec = self._streams.pop(stream_id, None)
+        if rec is None:
+            return
+        rec.finished = True
+        rec.buf = rec.buf[:0]
+        rec.pending = []
+        if rec.slot is not None:
+            self._free_slot(rec)
+        elif rec in self._queue:
+            self._queue.remove(rec)
 
     # -- stream lifecycle ---------------------------------------------------
 
@@ -332,8 +547,10 @@ class StreamServer:
             self._queue.remove(rec)
 
     def _free_slot(self, rec: _Stream) -> None:
-        self._slots[rec.slot] = None
+        s = rec.slot
+        self._slots[s] = None
         rec.slot = None
+        self._write_slot_custom(s, None)
         self._try_admit()
 
     def _try_admit(self) -> None:
@@ -343,6 +560,7 @@ class StreamServer:
                 rec.slot = s
                 rec.initialized = False
                 self._slots[s] = rec
+                self._write_slot_custom(s, rec.custom)
 
     # -- backpressure: latency SLO shedding + slot autoscaling --------------
 
@@ -357,7 +575,9 @@ class StreamServer:
         max_lag = int(self.acfg.max_lag_s * self.cfg.sample_rate)
         keep = max(self.geom.window, max_lag // 2)
         for rec in self._streams.values():
-            if rec.finished:
+            if rec.finished or rec.internal or rec.force_compute:
+                # learning work is exempt: shedding an enrollment utterance
+                # would silently corrupt the captured feature buffer
                 continue
             backlog = sum(map(len, rec.pending)) + len(rec.buf)
             if backlog <= max_lag:
@@ -413,10 +633,24 @@ class StreamServer:
                 return jnp.concatenate(
                     [a, jnp.zeros((grow,) + a.shape[1:], a.dtype)])
 
+            def pad_rows(a, row):
+                return jnp.concatenate(
+                    [a, jnp.broadcast_to(row, (grow,) + row.shape)])
+
             self._state = jax.tree_util.tree_map(pad, self._state)
             self._dstate = jax.tree_util.tree_map(pad, self._dstate)
             if self._vstate is not None:
                 self._vstate = jax.tree_util.tree_map(pad, self._vstate)
+            if self._cust_on:
+                fw, fb = self._base_head()
+                self._slot_delta = {k: pad(v)
+                                    for k, v in self._slot_delta.items()}
+                self._slot_head_w = pad_rows(self._slot_head_w, fw)
+                self._slot_head_b = pad_rows(self._slot_head_b, fb)
+                if self._slot_fills is not None:
+                    self._slot_fills = tuple(
+                        pad_rows(t, f) for t, f in zip(self._slot_fills,
+                                                       self._fills))
             self._slots.extend([None] * grow)
         else:
             assert all(r is None for r in self._slots[n:]), \
@@ -428,6 +662,14 @@ class StreamServer:
             if self._vstate is not None:
                 self._vstate = jax.tree_util.tree_map(lambda a: a[:n],
                                                       self._vstate)
+            if self._cust_on:
+                self._slot_delta = {k: v[:n]
+                                    for k, v in self._slot_delta.items()}
+                self._slot_head_w = self._slot_head_w[:n]
+                self._slot_head_b = self._slot_head_b[:n]
+                if self._slot_fills is not None:
+                    self._slot_fills = tuple(t[:n]
+                                             for t in self._slot_fills)
             self._slots = self._slots[:n]
         self.slots = n
         self._try_admit()
@@ -467,8 +709,16 @@ class StreamServer:
             if len(rec.recent) >= window:
                 key = jax.random.fold_in(self._base_key, rec.uid)[None]
                 t0 = time.perf_counter()
-                _, one = eng.init(jnp.asarray(rec.recent[None, -window:]),
-                                  key)
+                if self._cust_on and rec.custom is not None:
+                    d1 = {name: jnp.asarray(rec.custom["delta"][name])[None]
+                          for name in self._slot_delta}
+                    _, one = eng.init_custom(
+                        jnp.asarray(rec.recent[None, -window:]), key, d1,
+                        jnp.asarray(rec.custom["head"][0])[None],
+                        jnp.asarray(rec.custom["head"][1])[None])
+                else:
+                    _, one = eng.init(
+                        jnp.asarray(rec.recent[None, -window:]), key)
                 new_state = self._scatter(new_state, one, s)
                 dt = time.perf_counter() - t0
                 rec.wall_s += dt
@@ -515,7 +765,15 @@ class StreamServer:
                                          # later hops feed fresh samples only
             key = jax.random.fold_in(self._base_key, rec.uid)[None]
             t0 = time.perf_counter()
-            logits, one = self.engine.init(jnp.asarray(first[None]), key)
+            if self._cust_on and rec.custom is not None:
+                d1 = {name: jnp.asarray(rec.custom["delta"][name])[None]
+                      for name in self._slot_delta}
+                hw1 = jnp.asarray(rec.custom["head"][0])[None]
+                hb1 = jnp.asarray(rec.custom["head"][1])[None]
+                logits, one = self.engine.init_custom(
+                    jnp.asarray(first[None]), key, d1, hw1, hb1)
+            else:
+                logits, one = self.engine.init(jnp.asarray(first[None]), key)
             self._state = self._scatter(self._state, one, s)
             self._dstate = dec.reset_slot(self._dstate, s)
             if self._vstate is not None:
@@ -527,6 +785,7 @@ class StreamServer:
             self._hop_wall_s += dt
             rec.initialized = True
             rec.hops += 1
+            rec.consumed += window
             rec.recent = first.copy()
             rec.pending = []
             rec.silent_run = 0
@@ -563,6 +822,12 @@ class StreamServer:
                                             jnp.asarray(audio),
                                             jnp.asarray(ready))
             speech = np.asarray(sp) & ready
+            for s, rec in enumerate(self._slots):
+                # enrollment/replay hops must run the real IMC path — a
+                # gated (fill-advanced) hop would corrupt the captured
+                # feature buffer, so learning streams bypass the VAD gate
+                if ready[s] and rec is not None and rec.force_compute:
+                    speech[s] = True
 
         compute_mask = np.zeros((self.slots,), bool)
         fill_mask = np.zeros((self.slots,), bool)
@@ -586,34 +851,47 @@ class StreamServer:
                     fill_mask[s] = True   # advance by the no-op fill
                     rec.recent = np.concatenate([rec.recent,
                                                  aged])[-window:]
+                    rec.consumed += hop
                     rec.gated_hops += 1
                     self._gated_hops += 1
 
         events: List[dict] = []
 
         # wake replays: the deferred silent hops plus the onset hop run the
-        # real IMC path sequentially for this slot (rare; bounded by
-        # wake_margin + 1 launches-per-layer each), so the keyword prefix
-        # the VAD latency would have cut is decided exactly as if ungated
+        # real IMC path for this slot in ONE multi-hop launch per IMC layer
+        # (the tail just extends by the deferred hops' fresh columns), so
+        # the keyword prefix the VAD latency would have cut is decided
+        # exactly as if ungated — bit-identical to replaying hop by hop
         for s, chunks in replays:
             rec = self._slots[s]
+            n = len(chunks)
             mask = np.zeros((self.slots,), bool)
             mask[s] = True
             mask_j = jnp.asarray(mask)
-            for ch in chunks:
-                a = np.zeros((self.slots, hop), np.float32)
-                a[s] = ch
-                t0 = time.perf_counter()
-                lg, self._state = bundle["hop"](self._state,
-                                                jnp.asarray(a), mask_j)
-                self._dstate, out = self._decide(self._dstate, lg, mask_j)
-                out.score.block_until_ready()
-                dt = time.perf_counter() - t0
-                rec.wall_s += dt
-                self._hop_wall_s += dt
+            a = np.zeros((self.slots, n * hop), np.float32)
+            a[s] = np.concatenate(chunks)
+            t0 = time.perf_counter()
+            if self._cust_on:
+                fn = self._replay_fn(bundle, n, cust=True)
+                lg, self._state = fn(self._state, jnp.asarray(a), mask_j,
+                                     *self._slot_custom_args())
+            else:
+                fn = self._replay_fn(bundle, n, cust=False)
+                lg, self._state = fn(self._state, jnp.asarray(a), mask_j)
+            outs = []
+            for j in range(n):
+                self._dstate, out = self._decide(self._dstate, lg[:, j],
+                                                 mask_j)
+                outs.append(out)
+            outs[-1].score.block_until_ready()
+            dt = time.perf_counter() - t0
+            rec.wall_s += dt
+            self._hop_wall_s += dt
+            for j, (ch, out) in enumerate(zip(chunks, outs)):
                 self._decisions += 1
                 self._speech_hops += 1
                 rec.recent = np.concatenate([rec.recent, ch])[-window:]
+                rec.consumed += hop
                 rec.hops += 1
                 ev = {"stream": rec.stream_id, "hop": rec.hops - 1,
                       "keyword": int(out.keyword[s]),
@@ -627,18 +905,27 @@ class StreamServer:
         if compute_mask.any():
             t0 = time.perf_counter()
             mask_j = jnp.asarray(compute_mask)
-            hop_logits, self._state = bundle["hop"](self._state,
-                                                    jnp.asarray(audio),
-                                                    mask_j)
+            if self._cust_on:
+                hop_logits, self._state = bundle["hop_cust"](
+                    self._state, jnp.asarray(audio), mask_j,
+                    *self._slot_custom_args())
+            else:
+                hop_logits, self._state = bundle["hop"](self._state,
+                                                        jnp.asarray(audio),
+                                                        mask_j)
             hop_logits.block_until_ready()
             dt = time.perf_counter() - t0
             self._hop_wall_s += dt
             n_active = int(compute_mask.sum())
-            self._speech_hops += n_active
             for s, rec in enumerate(self._slots):
                 if compute_mask[s]:
+                    if rec.internal:
+                        self._learn_hops += 1
+                    else:
+                        self._speech_hops += 1
                     rec.hops += 1
                     rec.wall_s += dt / n_active
+                    rec.consumed += hop
                     rec.recent = np.concatenate([rec.recent,
                                                  audio[s]])[-window:]
             logits = np.where(compute_mask[:, None], np.asarray(hop_logits),
@@ -646,20 +933,29 @@ class StreamServer:
 
         if fill_mask.any():
             t0 = time.perf_counter()
-            self._state = bundle["gate"](self._state, jnp.asarray(fill_mask))
+            if self._cust_on and self._slot_fills is not None:
+                self._state = bundle["gate_cust"](self._state,
+                                                  jnp.asarray(fill_mask),
+                                                  self._slot_fills)
+            else:
+                self._state = bundle["gate"](self._state,
+                                             jnp.asarray(fill_mask))
             jax.block_until_ready(self._state)
             self._hop_wall_s += time.perf_counter() - t0
 
-        active = jnp.asarray(init_mask | compute_mask)
-        if bool(init_mask.any() or compute_mask.any()):
+        internal = np.asarray([rec is not None and rec.internal
+                               for rec in self._slots])
+        decide_mask = (init_mask | compute_mask) & ~internal
+        if bool(decide_mask.any()):
             self._dstate, out = self._decide(self._dstate,
-                                             jnp.asarray(logits), active)
-            self._decisions += int((init_mask | compute_mask).sum())
+                                             jnp.asarray(logits),
+                                             jnp.asarray(decide_mask))
+            self._decisions += int(decide_mask.sum())
             trig = np.asarray(out.trigger)
             kwd = np.asarray(out.keyword)
             score = np.asarray(out.score)
             for s, rec in enumerate(self._slots):
-                if rec is None or not (init_mask[s] or compute_mask[s]):
+                if rec is None or not decide_mask[s]:
                     continue
                 ev = {"stream": rec.stream_id, "hop": rec.hops - 1,
                       "keyword": int(kwd[s]), "score": float(score[s]),
@@ -667,6 +963,10 @@ class StreamServer:
                 events.append(ev)
                 if ev["trigger"]:
                     rec.triggers.append(ev)
+
+        # feature captures must see the post-hop states before slots retire
+        if self._cust is not None:
+            self._cust.on_step(self)
 
         # retire drained finished streams
         for rec in list(self._slots):
@@ -676,6 +976,10 @@ class StreamServer:
                 self._free_slot(rec)
         self._steps += 1
         self._retarget_hop(events, woke=bool(replays))
+        # background learning jobs: calibration layers, feature-replay
+        # spawns, bounded fine-tune epochs, hot swaps
+        if self._cust is not None:
+            self._cust.tick(self)
         return events
 
     def drain(self, max_steps: int = 10_000) -> List[dict]:
@@ -711,7 +1015,7 @@ class StreamServer:
                 "sheds": rec.sheds,
                 "wall_s": round(rec.wall_s, 4),
             }
-            for rec in self._streams.values()
+            for rec in self._streams.values() if not rec.internal
         }
         total_hops = self._speech_hops + self._gated_hops
         duty = (self._speech_hops / total_hops) if total_hops else None
@@ -731,6 +1035,7 @@ class StreamServer:
             "hop_retargets": self._hop_retargets,
             "speech_hops": self._speech_hops,
             "gated_hops": self._gated_hops,
+            "learn_hops": self._learn_hops,
             "duty_cycle": round(duty, 4) if duty is not None else None,
             "hop_wall_s": round(self._hop_wall_s, 4),
             "decisions_per_sec": round(
@@ -743,6 +1048,8 @@ class StreamServer:
             },
             "per_stream": per_stream,
         }
+        if self._cust is not None:
+            out["customization"] = self._cust.stats()
         if self.vcfg is not None:
             out["gated_energy"] = {
                 k: round(v, 4) if isinstance(v, float) else v

@@ -34,9 +34,17 @@ streams.  **One-launch-per-layer invariant:** a ``stream_step`` over a
 batch of B streams issues exactly one fused ``pallas_call`` per IMC layer
 (conv1..conv5) regardless of B — the scheduler
 (repro.serving.scheduler) rides every live slot on the same launch, masked
-slots included.  ``streaming=False`` selects the recompute fallback, which
-calls ``hw_forward`` on the full window per hop and is bit-identical to it
-by construction.
+slots included.  ``stream_multi_step`` advances n consecutive hops in the
+same single launch per layer (each layer's tail just extends by the extra
+hops' fresh columns) — the wake replay's batched drain.  Per-stream
+customization (repro.serving.customize) rides two optional operands:
+``bias_delta`` — integer compensated-bias deltas entering the kernel on
+the pre-sign (noise) operand, exactly where the word-line bias lands —
+and ``head_w``/``head_b``, a per-stream FC head; both are bit-exact
+against refolding the params (integer adds; the GAP/FC math has no float
+rounding on the fixed-point grids).  ``streaming=False`` selects the
+recompute fallback, which calls ``hw_forward`` on the full window per hop
+and is bit-identical to it by construction.
 
 ``gated_step`` is the voice-activity-gated no-op advance: a hop the VAD
 (repro.serving.vad) classified as silence shifts the layer carries and the
@@ -205,9 +213,15 @@ def _hop_sa_noise(keys: jax.Array, hops: jax.Array, layer: int,
 
 def hop_sa_noise_fields(keys: jax.Array, hops: jax.Array,
                         cfg: kws.KWSConfig, geom: StreamGeometry,
-                        std: float) -> Dict[str, jax.Array]:
+                        std: float, n_hops: int = 1) -> Dict[str, jax.Array]:
     """All IMC layers' tail noise-field values for one hop in ONE batched
     key derivation: keys (B, 2), hops (B,) -> {conv_i: (B, n_tail_i, C_i)}.
+
+    ``n_hops > 1`` extends each layer's tail to cover a run of consecutive
+    hops starting at ``hops`` (the wake-replay batching: the deferred
+    silent hops plus the onset hop advance in ONE multi-hop launch).  The
+    field itself is per-absolute-column, so the multi-hop evaluation is
+    bit-identical to evaluating the same columns hop by hop.
 
     Bit-identical to calling ``_hop_sa_noise`` per layer (the field is
     unchanged), but the ``fold_in(fold_in(key, layer), col)`` chain for
@@ -224,7 +238,7 @@ def hop_sa_noise_fields(keys: jax.Array, hops: jax.Array,
     for i in range(1, cfg.num_conv_layers):
         lg = geom.layers[i]
         n_new = lg.d_out * cfg.pools[i]
-        n_tail = lg.t_conv - lg.conv_lo
+        n_tail = lg.t_conv - lg.conv_lo + (n_hops - 1) * n_new
         specs.append((i, n_tail, cfg.channels[i]))
         col_chunks.append((n_new, lg.conv_lo, n_tail))
         lid_chunks.append(jnp.full((n_tail,), i, jnp.int32))
@@ -307,14 +321,55 @@ def _gap_fc(hw: kws.HWParams, ring: jax.Array):
     return feats @ hw.fc_w + hw.fc_b, feats
 
 
+def _ring_logits(hwp: kws.HWParams, ring: jax.Array,
+                 head_w: Optional[jax.Array],
+                 head_b: Optional[jax.Array]) -> jax.Array:
+    """GAP + FC with an optional per-stream head: ``head_w`` (B, D, C) /
+    ``head_b`` (B, C) replace the shared folded FC for every stream (the
+    scheduler broadcasts the base head into the rows of uncustomized
+    slots, so only hot-swapped slots actually diverge).  The per-row
+    matvec is the same contraction the shared matmul performs row-wise, so
+    a row whose head equals the base head produces the base logits."""
+    if head_w is None:
+        return _gap_fc(hwp, ring)[0]
+    feats = ACT_Q.quantize(jnp.mean(ring, axis=1))
+    return jax.vmap(lambda f, w, b: f @ w + b)(feats, head_w, head_b)
+
+
+def _merge_bias_delta(noise: Optional[jax.Array],
+                      delta: Optional[jax.Array],
+                      n_cols: int) -> Optional[jax.Array]:
+    """Fold a per-stream bias delta (B, C) into the per-column pre-SA
+    operand (B, n_cols, C).  The fused kernel adds this operand exactly
+    where the word-line bias lands (pre-sign), so an integer delta rides
+    the existing SA-noise input and a customized stream's IMC layers run in
+    the SAME batched launch as every other slot — per-slot compensated
+    biases without per-slot kernels.  With no SA noise the operand is the
+    broadcast delta alone (integers: bit-exact vs refolding the bias)."""
+    if delta is None:
+        return noise
+    d = delta[:, None, :]
+    if noise is None:
+        return jnp.broadcast_to(d, (delta.shape[0], n_cols, delta.shape[1]))
+    return noise + d
+
+
 def stream_init(hw, window: jax.Array, keys: jax.Array,
                 cfg: kws.KWSConfig, geom: StreamGeometry, *,
                 chip_offsets: Optional[Dict[str, jax.Array]] = None,
                 sa_noise_std: float = 0.0,
-                use_kernel: bool = True):
+                use_kernel: bool = True,
+                bias_delta: Optional[Dict[str, jax.Array]] = None,
+                head_w: Optional[jax.Array] = None,
+                head_b: Optional[jax.Array] = None):
     """Process a stream's first full window (B, window) and build its
     incremental state.  Equivalent to hw_forward on the window (hop 0 of
-    the noise field), plus capturing each layer's ring tail."""
+    the noise field), plus capturing each layer's ring tail.
+
+    ``bias_delta`` ({conv_i: (B, C_i)}) and ``head_w``/``head_b`` are the
+    per-stream customization riders (repro.serving.customize): integer
+    bias deltas from bias compensation and a fine-tuned FC head, applied
+    per batch row."""
     hwp, packed = kws.as_hw_params(hw)
     b = window.shape[0]
     hops0 = jnp.zeros((b,), jnp.int32)
@@ -324,34 +379,37 @@ def stream_init(hw, window: jax.Array, keys: jax.Array,
         noise = off = packed_i = None
         if i > 0:
             carries.append(_tail(h, geom.layers[i].carry))
+            lg = geom.layers[i]
             if sa_noise_std > 0.0:
-                lg = geom.layers[i]
                 cols = jnp.arange(lg.t_conv)
                 noise = jax.vmap(lambda k: sa_noise_columns(
                     k, i, cols, cfg.channels[i], sa_noise_std))(keys)
+            if bias_delta is not None:
+                noise = _merge_bias_delta(noise, bias_delta[f"conv{i}"],
+                                          lg.t_conv)
             if chip_offsets is not None:
                 off = chip_offsets[f"conv{i}"]
             packed_i = packed[f"conv{i}"] if packed else None
         h = kws.hw_conv_layer(hwp, i, h, cfg, packed=packed_i,
                               chip_offset=off, sa_noise=noise,
                               use_kernel=use_kernel)
-    logits, _ = _gap_fc(hwp, h)
+    logits = _ring_logits(hwp, h, head_w, head_b)
     state = StreamState(audio_carry=_tail(window, geom.layers[0].carry),
                         carries=tuple(carries), ring=h,
                         hop=hops0 + 1, key=keys)
     return logits, state
 
 
-def stream_step(hw, state: StreamState, audio: jax.Array,
-                cfg: kws.KWSConfig, geom: StreamGeometry, *,
-                chip_offsets: Optional[Dict[str, jax.Array]] = None,
-                sa_noise_std: float = 0.0,
-                use_kernel: bool = True):
-    """Advance a batch of streams by one hop: audio (B, hop) -> (logits,
-    new state).  Each layer computes only its tail (carry + fresh columns)
-    — one fused-kernel launch per IMC layer for the whole batch — and the
-    decision is re-formed from the GAP ring.  Bit-identical to hw_forward
-    on the corresponding full window (the equivalence tests drive both)."""
+def _stream_advance(hw, state: StreamState, audio: jax.Array,
+                    cfg: kws.KWSConfig, geom: StreamGeometry, n_hops: int, *,
+                    chip_offsets, sa_noise_std, use_kernel, bias_delta,
+                    head_w, head_b):
+    """Shared body of ``stream_step`` / ``stream_multi_step``: advance a
+    batch of streams by ``n_hops`` consecutive hops with ONE fused-kernel
+    launch per IMC layer — each layer's tail simply extends by the extra
+    hops' fresh columns, and the per-absolute-column noise field covers
+    the extended tail (``hop_sa_noise_fields(n_hops=...)``).  Returns
+    (per-hop logits [(B, C)] * n_hops, new state)."""
     hwp, packed = kws.as_hw_params(hw)
     x = jnp.concatenate([state.audio_carry, audio], axis=1)
     new_audio_carry = _tail(x, geom.layers[0].carry)
@@ -359,7 +417,7 @@ def stream_step(hw, state: StreamState, audio: jax.Array,
     noise_all = None
     if sa_noise_std > 0.0:
         noise_all = hop_sa_noise_fields(state.key, state.hop, cfg, geom,
-                                        sa_noise_std)
+                                        sa_noise_std, n_hops=n_hops)
     new_carries = []
     for i in range(1, cfg.num_conv_layers):
         lg = geom.layers[i]
@@ -367,6 +425,9 @@ def stream_step(hw, state: StreamState, audio: jax.Array,
         inp = jnp.concatenate([state.carries[i - 1], h], axis=1)
         new_carries.append(_tail(inp, lg.carry))
         noise = noise_all[name] if noise_all is not None else None
+        if bias_delta is not None:
+            t_conv_tail = (inp.shape[1] - cfg.kernels[i]) // cfg.strides[i] + 1
+            noise = _merge_bias_delta(noise, bias_delta[name], t_conv_tail)
         off = chip_offsets[name] if chip_offsets is not None else None
         if use_kernel:
             from repro.kernels.imc_mav import ops as mav_ops
@@ -378,31 +439,83 @@ def stream_step(hw, state: StreamState, audio: jax.Array,
         else:
             h = kws.hw_conv_layer(hwp, i, inp, cfg, chip_offset=off,
                                   sa_noise=noise, use_kernel=False)
-    ring = jnp.concatenate([state.ring[:, geom.d_feat:], h], axis=1)
-    logits, _ = _gap_fc(hwp, ring)
+    logits_hops = []
+    for j in range(1, n_hops + 1):
+        ring = jnp.concatenate([state.ring, h[:, :j * geom.d_feat]],
+                               axis=1)[:, -geom.t_feat:]
+        logits_hops.append(_ring_logits(hwp, ring, head_w, head_b))
     new_state = StreamState(audio_carry=new_audio_carry,
                             carries=tuple(new_carries), ring=ring,
-                            hop=state.hop + 1, key=state.key)
-    return logits, new_state
+                            hop=state.hop + n_hops, key=state.key)
+    return logits_hops, new_state
+
+
+def stream_step(hw, state: StreamState, audio: jax.Array,
+                cfg: kws.KWSConfig, geom: StreamGeometry, *,
+                chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                sa_noise_std: float = 0.0,
+                use_kernel: bool = True,
+                bias_delta: Optional[Dict[str, jax.Array]] = None,
+                head_w: Optional[jax.Array] = None,
+                head_b: Optional[jax.Array] = None):
+    """Advance a batch of streams by one hop: audio (B, hop) -> (logits,
+    new state).  Each layer computes only its tail (carry + fresh columns)
+    — one fused-kernel launch per IMC layer for the whole batch — and the
+    decision is re-formed from the GAP ring.  Bit-identical to hw_forward
+    on the corresponding full window (the equivalence tests drive both).
+    ``bias_delta``/``head_w``/``head_b`` are the per-stream customization
+    riders (see ``stream_init``)."""
+    logits_hops, new_state = _stream_advance(
+        hw, state, audio, cfg, geom, 1, chip_offsets=chip_offsets,
+        sa_noise_std=sa_noise_std, use_kernel=use_kernel,
+        bias_delta=bias_delta, head_w=head_w, head_b=head_b)
+    return logits_hops[0], new_state
+
+
+def stream_multi_step(hw, state: StreamState, audio: jax.Array,
+                      cfg: kws.KWSConfig, geom: StreamGeometry,
+                      n_hops: int, *,
+                      chip_offsets: Optional[Dict[str, jax.Array]] = None,
+                      sa_noise_std: float = 0.0,
+                      use_kernel: bool = True,
+                      bias_delta: Optional[Dict[str, jax.Array]] = None,
+                      head_w: Optional[jax.Array] = None,
+                      head_b: Optional[jax.Array] = None):
+    """Advance by ``n_hops`` consecutive hops in ONE fused-kernel launch
+    per IMC layer: audio (B, n_hops*hop) -> (logits (B, n_hops, C), new
+    state).  Bit-identical to ``n_hops`` sequential ``stream_step`` calls
+    (same columns, same per-absolute-column noise realizations — the
+    columns are just computed in one tail instead of n) — the VAD wake
+    replay uses this to drain its deferred hops in one launch instead of
+    one launch per deferred hop."""
+    logits_hops, new_state = _stream_advance(
+        hw, state, audio, cfg, geom, n_hops, chip_offsets=chip_offsets,
+        sa_noise_std=sa_noise_std, use_kernel=use_kernel,
+        bias_delta=bias_delta, head_w=head_w, head_b=head_b)
+    return jnp.stack(logits_hops, axis=1), new_state
 
 
 def window_init(hw, window: jax.Array, keys: jax.Array,
                 cfg: kws.KWSConfig, geom: StreamGeometry, *,
                 chip_offsets=None, sa_noise_std: float = 0.0,
-                use_kernel: bool = True):
+                use_kernel: bool = True, bias_delta=None,
+                head_w=None, head_b=None):
     """Recompute-fallback init: hw_forward on the first window."""
     logits, state = _window_forward(hw, window, keys,
                                     jnp.zeros((window.shape[0],), jnp.int32),
                                     cfg, geom, chip_offsets=chip_offsets,
                                     sa_noise_std=sa_noise_std,
-                                    use_kernel=use_kernel)
+                                    use_kernel=use_kernel,
+                                    bias_delta=bias_delta,
+                                    head_w=head_w, head_b=head_b)
     return logits, state
 
 
 def window_step(hw, state: WindowState, audio: jax.Array,
                 cfg: kws.KWSConfig, geom: StreamGeometry, *,
                 chip_offsets=None, sa_noise_std: float = 0.0,
-                use_kernel: bool = True):
+                use_kernel: bool = True, bias_delta=None,
+                head_w=None, head_b=None):
     """Recompute-fallback hop: slide the audio window, rerun hw_forward on
     all of it.  Bit-identical to the streaming path (same noise field),
     just ~window/hop times the work — the baseline --streaming benches
@@ -410,20 +523,56 @@ def window_step(hw, state: WindowState, audio: jax.Array,
     window = jnp.concatenate([state.window[:, geom.hop:], audio], axis=1)
     return _window_forward(hw, window, state.key, state.hop, cfg, geom,
                            chip_offsets=chip_offsets,
-                           sa_noise_std=sa_noise_std, use_kernel=use_kernel)
+                           sa_noise_std=sa_noise_std, use_kernel=use_kernel,
+                           bias_delta=bias_delta, head_w=head_w,
+                           head_b=head_b)
+
+
+def window_multi_step(hw, state: WindowState, audio: jax.Array,
+                      cfg: kws.KWSConfig, geom: StreamGeometry,
+                      n_hops: int, *, chip_offsets=None,
+                      sa_noise_std: float = 0.0, use_kernel: bool = True,
+                      bias_delta=None, head_w=None, head_b=None):
+    """Recompute-fallback twin of ``stream_multi_step``: ``n_hops``
+    sequential full-window recomputes in one call — the recompute path has
+    no launch-count story to improve, so this only unifies the scheduler's
+    wake-replay entry.  Returns (logits (B, n_hops, C), state)."""
+    logits = []
+    for j in range(n_hops):
+        lg, state = window_step(hw, state,
+                                audio[:, j * geom.hop:(j + 1) * geom.hop],
+                                cfg, geom, chip_offsets=chip_offsets,
+                                sa_noise_std=sa_noise_std,
+                                use_kernel=use_kernel,
+                                bias_delta=bias_delta, head_w=head_w,
+                                head_b=head_b)
+        logits.append(lg)
+    return jnp.stack(logits, axis=1), state
 
 
 def _window_forward(hw, window, keys, hops, cfg, geom, *, chip_offsets,
-                    sa_noise_std, use_kernel):
+                    sa_noise_std, use_kernel, bias_delta=None,
+                    head_w=None, head_b=None):
     noise = None
     if sa_noise_std > 0.0:
         per_layer = jax.vmap(
             lambda k, t: window_sa_noise(k, cfg, geom, t, sa_noise_std))(
                 keys, hops)
         noise = {name: v[:, 0] for name, v in per_layer.items()}
-    logits, _ = kws.hw_forward(hw, window, cfg, chip_offsets=chip_offsets,
-                               sa_noise_std=sa_noise_std, sa_noise=noise,
-                               use_kernel=use_kernel)
+    if bias_delta is not None:
+        b = window.shape[0]
+        noise = dict(noise) if noise is not None else {}
+        for i in range(1, cfg.num_conv_layers):
+            name = f"conv{i}"
+            noise[name] = _merge_bias_delta(noise.get(name),
+                                            bias_delta[name],
+                                            geom.layers[i].t_conv)
+    logits, feats = kws.hw_forward(hw, window, cfg,
+                                   chip_offsets=chip_offsets,
+                                   sa_noise_std=sa_noise_std, sa_noise=noise,
+                                   use_kernel=use_kernel)
+    if head_w is not None:
+        logits = jax.vmap(lambda f, w, b: f @ w + b)(feats, head_w, head_b)
     return logits, WindowState(window=window, hop=hops + 1, key=keys)
 
 
@@ -457,8 +606,19 @@ def gated_step(state: StreamState, cfg: kws.KWSConfig, geom: StreamGeometry,
     This is the energy model's leakage-only hop: the only digital activity
     is the VAD front end (see ``repro.core.energy.gated_energy_summary``).
     On all-speech audio ``gated_step`` never runs, which is why gating with
-    the VAD forced to "speech" stays bit-identical to ungated streaming."""
+    the VAD forced to "speech" stays bit-identical to ungated streaming.
+
+    Each ``fills`` entry is either a shared (C_i,) silence column or a
+    per-stream (B, C_i) one — hot-swapped slots carry compensated biases,
+    so their silence response differs from the base chip's
+    (repro.serving.customize recomputes it at swap time)."""
     b = state.hop.shape[0]
+
+    def _fill(f, d):
+        if f.ndim == 1:
+            return jnp.broadcast_to(f, (b, d, f.shape[0]))
+        return jnp.broadcast_to(f[:, None, :], (b, d, f.shape[-1]))
+
     audio_carry = _tail(
         jnp.concatenate([state.audio_carry,
                          jnp.zeros((b, geom.hop))], axis=1),
@@ -466,13 +626,11 @@ def gated_step(state: StreamState, cfg: kws.KWSConfig, geom: StreamGeometry,
     new_carries = []
     for i in range(1, cfg.num_conv_layers):
         lg = geom.layers[i]
-        fill = jnp.broadcast_to(fills[i - 1],
-                                (b, lg.d_in, fills[i - 1].shape[0]))
         new_carries.append(_tail(
-            jnp.concatenate([state.carries[i - 1], fill], axis=1),
+            jnp.concatenate([state.carries[i - 1],
+                             _fill(fills[i - 1], lg.d_in)], axis=1),
             lg.carry))
-    ring_fill = jnp.broadcast_to(fills[-1],
-                                 (b, geom.d_feat, fills[-1].shape[0]))
+    ring_fill = _fill(fills[-1], geom.d_feat)
     ring = jnp.concatenate([state.ring[:, geom.d_feat:], ring_fill], axis=1)
     return StreamState(audio_carry=audio_carry, carries=tuple(new_carries),
                        ring=ring, hop=state.hop + 1, key=state.key)
@@ -510,11 +668,19 @@ class StreamEngine:
         self.streaming = streaming
         kw = dict(chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
                   use_kernel=use_kernel)
+        self._kw = kw
+        self._hw = hw
         init = stream_init if streaming else window_init
         step = stream_step if streaming else window_step
         geom = self.geom
         self._init = jax.jit(lambda w, k: init(hw, w, k, cfg, geom, **kw))
         self._step = jax.jit(lambda s, a: step(hw, s, a, cfg, geom, **kw))
+        # customized (per-stream bias delta + head) and multi-hop variants,
+        # jitted on first use so the plain serving path never pays for them
+        self._init_cust = None
+        self._step_cust = None
+        self._multi: Dict[int, object] = {}
+        self._multi_cust: Dict[int, object] = {}
 
     def zeros_state(self, n: int):
         if self.streaming:
@@ -528,6 +694,51 @@ class StreamEngine:
     def step(self, state, audio: jax.Array):
         """One hop (B, hop) -> (logits, state)."""
         return self._step(state, audio)
+
+    def init_custom(self, window: jax.Array, keys: jax.Array,
+                    bias_delta, head_w, head_b):
+        """``init`` with the per-stream customization riders."""
+        if self._init_cust is None:
+            hw, cfg, geom, kw = self._hw, self.cfg, self.geom, self._kw
+            fn = stream_init if self.streaming else window_init
+            self._init_cust = jax.jit(
+                lambda w, k, d, hwt, hb: fn(hw, w, k, cfg, geom, **kw,
+                                            bias_delta=d, head_w=hwt,
+                                            head_b=hb))
+        return self._init_cust(window, keys, bias_delta, head_w, head_b)
+
+    def step_custom(self, state, audio: jax.Array, bias_delta,
+                    head_w, head_b):
+        """``step`` with the per-stream customization riders — still one
+        fused-kernel launch per IMC layer for the whole batch."""
+        if self._step_cust is None:
+            hw, cfg, geom, kw = self._hw, self.cfg, self.geom, self._kw
+            fn = stream_step if self.streaming else window_step
+            self._step_cust = jax.jit(
+                lambda s, a, d, hwt, hb: fn(hw, s, a, cfg, geom, **kw,
+                                            bias_delta=d, head_w=hwt,
+                                            head_b=hb))
+        return self._step_cust(state, audio, bias_delta, head_w, head_b)
+
+    def multi_step(self, state, audio: jax.Array, n_hops: int,
+                   bias_delta=None, head_w=None, head_b=None):
+        """``n_hops`` hops in one call — and, on the streaming path, one
+        fused-kernel launch per IMC layer (the wake-replay batching).
+        Returns (logits (B, n_hops, C), state)."""
+        hw, cfg, geom, kw = self._hw, self.cfg, self.geom, self._kw
+        fn = stream_multi_step if self.streaming else window_multi_step
+        if bias_delta is None and head_w is None:
+            if n_hops not in self._multi:
+                self._multi[n_hops] = jax.jit(
+                    lambda s, a: fn(hw, s, a, cfg, geom, n_hops, **kw))
+            return self._multi[n_hops](state, audio)
+        if n_hops not in self._multi_cust:
+            self._multi_cust[n_hops] = jax.jit(
+                lambda s, a, d, hwt, hb: fn(hw, s, a, cfg, geom, n_hops,
+                                            **kw, bias_delta=d, head_w=hwt,
+                                            head_b=hb))
+        return self._multi_cust[n_hops](state, audio, bias_delta, head_w,
+                                        head_b)
 
 
 # ---------------------------------------------------------------------------

@@ -179,6 +179,55 @@ def hw_features(hw, x: np.ndarray,
     return np.concatenate(outs, axis=0)
 
 
+def calibration_ideal_counts(hw, xcal: np.ndarray,
+                             cfg: kws.KWSConfig = kws.PAPER_KWS
+                             ) -> Dict[str, jax.Array]:
+    """The test-mode reference measurement: per-layer ideal (noise-free,
+    offset-free) pre-SA counts of the calibration patterns.  First step of
+    the resumable calibration (one forward; the per-layer compensation
+    steps in ``compensate_layer_bias`` then consume it one layer at a
+    time — a scheduler tick can run a bounded number of layers)."""
+    hwp, _ = kws.as_hw_params(hw)
+    xc = jnp.asarray(xcal)
+
+    @jax.jit
+    def ideal_counts():
+        _, _, log = kws.hw_forward(hwp, xc, cfg, chip_offsets=None,
+                                   sa_noise_std=0.0, collect_counts=True)
+        return log
+
+    return ideal_counts()
+
+
+def compensate_layer_bias(bias_int: jax.Array, ideal_counts: jax.Array,
+                          chip_offset: jax.Array, key: jax.Array,
+                          sa_noise_std: float = 1.0,
+                          macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO
+                          ) -> jax.Array:
+    """One layer of test-mode compensation: measure (ideal + static chip
+    offset + fresh SA read noise), estimate the per-channel discrepancy and
+    fold it into the in-memory BN bias.  ``key`` must be the layer's slot
+    of the PRNG split chain (see ``calibrate_and_compensate``) for the
+    step-wise run to reproduce the monolithic one bit-exactly."""
+    measured = (ideal_counts + chip_offset
+                + sa_noise_std * jax.random.normal(key, ideal_counts.shape))
+    est = compensation.estimate_channel_offsets(ideal_counts, measured)
+    return compensation.compensate_bias(bias_int, est, macro)
+
+
+def calibration_layer_keys(cfg: kws.KWSConfig, seed: int = 0
+                           ) -> Dict[str, jax.Array]:
+    """The per-layer measurement keys of the calibration split chain —
+    shared by the monolithic driver and the tick-resumable serving path so
+    both take identical SA-noise reads."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name in cfg.imc_layer_names():
+        key, sub = jax.random.split(key)
+        out[name] = sub
+    return out
+
+
 def calibrate_and_compensate(hw, xcal: np.ndarray,
                              chip_offsets: Dict[str, jax.Array],
                              cfg: kws.KWSConfig = kws.PAPER_KWS,
@@ -196,28 +245,19 @@ def calibrate_and_compensate(hw, xcal: np.ndarray,
     ideal counts + the chip's static offset + fresh SA noise per read,
     averaged over the calibration patterns.
 
-    Accepts HWParams or PackedHWParams and returns the same kind (the
-    compensated biases are re-packed — reprogramming the bias word lines)."""
+    Driver over the resumable pieces (``calibration_ideal_counts`` +
+    ``compensate_layer_bias`` with ``calibration_layer_keys``) — the
+    serving enrollment sessions run the same pieces one-layer-per-tick and
+    land on the same biases.  Accepts HWParams or PackedHWParams and
+    returns the same kind (the compensated biases are re-packed —
+    reprogramming the bias word lines)."""
     hw, was_packed = kws.as_hw_params(hw)
-    xc = jnp.asarray(xcal)
-
-    @jax.jit
-    def ideal_counts():
-        _, _, log = kws.hw_forward(hw, xc, cfg, chip_offsets=None,
-                                   sa_noise_std=0.0, collect_counts=True)
-        return log
-
-    ideal_log = ideal_counts()
-    key = jax.random.PRNGKey(seed)
+    ideal_log = calibration_ideal_counts(hw, xcal, cfg)
+    keys = calibration_layer_keys(cfg, seed)
     new_bias = dict(hw.bias)
     for name in cfg.imc_layer_names():
-        key, sub = jax.random.split(key)
-        measured = (ideal_log[name] + chip_offsets[name]
-                    + sa_noise_std * jax.random.normal(
-                        sub, ideal_log[name].shape))
-        est = compensation.estimate_channel_offsets(ideal_log[name],
-                                                    measured)
-        new_bias[name] = compensation.compensate_bias(hw.bias[name], est,
-                                                      macro)
+        new_bias[name] = compensate_layer_bias(
+            hw.bias[name], ideal_log[name], chip_offsets[name], keys[name],
+            sa_noise_std, macro)
     out = hw._replace(bias=new_bias)
     return kws.pack_hw_params(out, cfg) if was_packed is not None else out

@@ -1,0 +1,477 @@
+"""The customization-serving contract (repro.serving.customize):
+
+* a CustomizationSession driven through scheduler ticks lands on EXACTLY
+  the offline loop's result on the same recorded utterances — same
+  compensated biases (calibrate_and_compensate) and same fine-tuned head
+  (hw_features -> quantized_head_finetune), bit for bit, chip offsets
+  included (SA-noise-free configurations — the contract's scope);
+* a mixed inference+learning scheduler tick (live stream hops + session
+  replay hops in the same batch) still issues exactly ONE fused-kernel
+  launch per IMC layer;
+* the batched ``sga_update`` kernel (per-row learning rates) is
+  bit-identical to the jnp optimizer path;
+* ``finetune_epochs`` chunked across ticks equals the monolithic
+  ``quantized_head_finetune``;
+* a hot-swapped / ``install_custom``-ed profile serves bit-identically to
+  a dedicated server on the refolded PackedHWParams, and enabling
+  customization never perturbs other streams' decisions;
+* the wake replay advances its whole deferred run in ONE multi-hop
+  launch, bit-identical to sequential single-hop replays.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.core import imc
+from repro.core.onchip_training import (OnChipTrainConfig, apply_update,
+                                        epoch_grads, finetune_epochs,
+                                        finetune_init,
+                                        quantized_head_finetune,
+                                        sga_threshold)
+from repro.kernels.sga_update import ops as sga_ops
+from repro.models import kws as m
+from repro.serving import (CustomizeConfig, StreamServer, VADConfig,
+                           make_stream_geometry)
+from repro.serving import stream as sv
+from repro.training import kws as tr
+
+L, HOP = 640, 64
+CFG = m.KWSConfig(sample_len=L)
+TRAIN = OnChipTrainConfig(epochs=23)
+
+
+@pytest.fixture(scope="module")
+def folded():
+    params = m.init_params(jax.random.PRNGKey(5), CFG)
+    state = m.init_state(CFG)
+    return m.fold_params(params, state, CFG, pack=True)
+
+
+def _chip(std=4.0):
+    chans = {f"conv{i}": CFG.channels[i]
+             for i in range(1, CFG.num_conv_layers)}
+    return imc.sample_chip_offsets(
+        jax.random.PRNGKey(9), chans,
+        imc.IMCNoiseParams(mav_offset_std=std))
+
+
+def _utterances(n, seed=0):
+    rng = np.random.default_rng(seed)
+    utts = [rng.uniform(-1, 1, L).astype(np.float32) for _ in range(n)]
+    labels = [int(rng.integers(0, CFG.num_classes)) for _ in range(n)]
+    return utts, labels
+
+
+def _drive(srv, sess, live=None, max_steps=400):
+    """Step the server until the session finishes, feeding the live
+    stream one hop per tick (a genuinely mixed serving+learning load)."""
+    pos = 0
+    for _ in range(max_steps):
+        if live is not None and pos < len(live):
+            srv.submit("live", live[pos:pos + HOP])
+            pos += HOP
+        srv.step()
+        if sess.done:
+            return
+    raise AssertionError(f"session stuck in phase {sess.phase}")
+
+
+# ---------------------------------------------------------------------------
+# The equivalence gate: session == offline loop, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_session_matches_offline_loop(folded):
+    """Enrollment through live hops + tick-resumable calibration +
+    batched-kernel fine-tuning must land on EXACTLY the offline
+    customize_onchip result for the same utterances."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                       chip_offsets=offs)
+    rng = np.random.default_rng(1)
+    live = rng.uniform(-1, 1, L + 60 * HOP).astype(np.float32)
+    srv.submit("live", live[:L])
+
+    utts, labels = _utterances(5)
+    sess = srv.customize("user", CustomizeConfig(
+        train=TRAIN, epochs_per_tick=7, layers_per_tick=2))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess, live=live[L:])
+    assert sess.phase == "swapped"
+    res = sess.result
+
+    # the hop-aligned enrollment padding makes the recorded windows the
+    # raw utterances — the offline loop runs on the identical inputs
+    recorded = np.stack(sess.windows)
+    np.testing.assert_array_equal(recorded, np.stack(utts))
+
+    hw_c = tr.calibrate_and_compensate(hw, recorded, offs, CFG,
+                                       sa_noise_std=1.0, seed=0)
+    hw_cp, _ = m.as_hw_params(hw_c)
+    for name in CFG.imc_layer_names():
+        np.testing.assert_array_equal(res.bias[name],
+                                      np.asarray(hw_cp.bias[name]),
+                                      err_msg=name)
+    feats = tr.hw_features(hw_c, recorded, CFG, chip_offsets=offs)
+    w_ref, b_ref = quantized_head_finetune(
+        jnp.asarray(feats), jnp.asarray(labels), hw_cp.fc_w, hw_cp.fc_b,
+        TRAIN)
+    np.testing.assert_array_equal(res.fc_w, np.asarray(w_ref))
+    np.testing.assert_array_equal(res.fc_b, np.asarray(b_ref))
+    # the compensation moved at least one bias (the run exercised it)
+    assert any(
+        not np.array_equal(res.bias[n], np.asarray(
+            m.as_hw_params(hw)[0].bias[n]))
+        for n in CFG.imc_layer_names())
+    assert res.energy["uj_per_finetune_step"] > 0
+    s = srv.stats()
+    assert s["customization"]["sessions"][0]["phase"] == "swapped"
+    assert s["learn_hops"] > 0
+
+
+@pytest.mark.streaming
+def test_customization_does_not_disturb_other_streams(folded):
+    """The live stream's decision sequence on a server running a full
+    enrollment session is bit-identical to a plain server's — learning
+    rides the same launches without perturbing inference slots."""
+    hw = folded
+    offs = _chip()
+    rng = np.random.default_rng(2)
+    live = rng.uniform(-1, 1, L + 30 * HOP).astype(np.float32)
+
+    plain = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                         chip_offsets=offs)
+    plain.submit("live", live)
+    plain.finish("live")
+    ev_plain = [e for e in plain.drain() if e["stream"] == "live"]
+
+    srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                       chip_offsets=offs)
+    srv.submit("live", live)
+    srv.finish("live")
+    utts, labels = _utterances(3, seed=3)
+    sess = srv.customize("user", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=11), epochs_per_tick=4))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    events = srv.drain()
+    for _ in range(200):
+        if sess.done:
+            break
+        events.extend(srv.step())
+    assert sess.done
+    ev_live = [e for e in events if e["stream"] == "live"]
+    assert ev_live == ev_plain
+
+
+# ---------------------------------------------------------------------------
+# One-launch-per-layer on mixed inference+learning ticks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_mixed_tick_one_fused_launch_per_layer(folded, monkeypatch):
+    """A tick where a live inference hop and session feature-replay hops
+    land in the same batch must trace exactly one pallas_call per IMC
+    layer — learning forwards ride the inference launch, they do not add
+    launches."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=3, use_kernel=True,
+                       chip_offsets=offs)
+    rng = np.random.default_rng(4)
+    live = rng.uniform(-1, 1, L + 200 * HOP).astype(np.float32)
+    srv.submit("live", live[:L])
+    pos = L
+
+    utts, labels = _utterances(3, seed=5)
+    sess = srv.customize("user", CustomizeConfig(train=TRAIN))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+
+    def replay_hop_pending():
+        # a replay slot that initialized last tick and will hop this tick
+        return any(rec is not None and rec.internal and rec.initialized
+                   and len(rec.buf) >= HOP for rec in srv._slots)
+
+    for _ in range(400):
+        if replay_hop_pending():
+            break
+        srv.submit("live", live[pos:pos + HOP])
+        pos += HOP
+        srv.step()
+    assert replay_hop_pending(), "never reached a replay hop"
+    assert sess.phase == "extracting"
+
+    srv.submit("live", live[pos:pos + HOP])     # live hop rides along too
+    jax.clear_caches()
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    srv.step()
+    assert len(calls) == CFG.num_conv_layers - 1, calls
+
+
+# ---------------------------------------------------------------------------
+# Step-wise core pieces
+# ---------------------------------------------------------------------------
+
+
+def test_finetune_epochs_chunked_resumable():
+    """Any chunking of the epoch range equals the monolithic loop."""
+    rng = np.random.default_rng(6)
+    feats = jnp.asarray(rng.normal(size=(12, 32)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 10, 12).astype(np.int32))
+    w0 = jnp.asarray(rng.normal(size=(32, 10)).astype(np.float32) * 0.05)
+    b0 = jnp.zeros((10,))
+    cfg = OnChipTrainConfig(epochs=30)
+    w_ref, b_ref = quantized_head_finetune(feats, labels, w0, b0, cfg)
+
+    state, fq, oh = finetune_init(feats, labels, w0, b0, cfg)
+    for start, n in ((0, 7), (7, 7), (14, 7), (21, 9)):
+        state = finetune_epochs(state, fq, oh, cfg, start, n)
+    np.testing.assert_array_equal(np.asarray(state.w), np.asarray(w_ref))
+    np.testing.assert_array_equal(np.asarray(state.b), np.asarray(b_ref))
+
+
+def test_sga_update_batch_matches_jnp_apply():
+    """The row-batched fused kernel (per-row lr/G_th) == the jnp
+    SGA + SGD + quantize path, elementwise, for every row."""
+    rng = np.random.default_rng(7)
+    cfg = OnChipTrainConfig(epochs=1)
+    rows = 3
+    d, c = 40, 10
+    states, grads, lrs = [], [], [1.0 / 16, 1.0 / 32, 1.0 / 128]
+    for r in range(rows):
+        w = cfg.weight_fmt.quantize(
+            jnp.asarray(rng.normal(size=(d, c)).astype(np.float32) * 0.3))
+        b = cfg.weight_fmt.quantize(
+            jnp.asarray(rng.normal(size=(c,)).astype(np.float32) * 0.3))
+        aw = cfg.accum_fmt.quantize(
+            jnp.asarray(rng.normal(size=(d, c)).astype(np.float32) * 0.02))
+        ab = jnp.zeros((c,))
+        gw = cfg.grad_fmt.quantize(
+            jnp.asarray(rng.normal(size=(d, c)).astype(np.float32) * 0.2))
+        gb = cfg.grad_fmt.quantize(
+            jnp.asarray(rng.normal(size=(c,)).astype(np.float32) * 0.2))
+        states.append((w, b, aw, ab))
+        grads.append((gw, gb))
+
+    rows_w = jnp.stack([jnp.concatenate([w.ravel(), b.ravel()])
+                        for (w, b, _, _) in states])
+    rows_g = jnp.stack([jnp.concatenate([gw.ravel(), gb.ravel()])
+                        for (gw, gb) in grads])
+    rows_a = jnp.stack([jnp.concatenate([aw.ravel(), ab.ravel()])
+                        for (_, _, aw, ab) in states])
+    lr_arr = jnp.asarray(lrs)
+    th_arr = jnp.stack([sga_threshold(lr, cfg.weight_fmt) for lr in lrs])
+    nw, na = sga_ops.sga_update_batch(
+        rows_w, rows_g, rows_a, lr_arr, th_arr,
+        w_scale=cfg.weight_fmt.scale, w_max=cfg.weight_fmt.max_value,
+        a_scale=cfg.accum_fmt.scale)
+
+    from repro.core.onchip_training import HeadState
+    for r in range(rows):
+        w, b, aw, ab = states[r]
+        gw, gb = grads[r]
+        st = HeadState(w=w, b=b, accum_w=aw, accum_b=ab,
+                       key=jax.random.PRNGKey(0))
+        ref = apply_update(st, gw, gb, jnp.asarray(lrs[r]),
+                           st.key, cfg)
+        got_w = nw[r, :d * c].reshape(d, c)
+        got_b = nw[r, d * c:d * c + c]
+        got_aw = na[r, :d * c].reshape(d, c)
+        got_ab = na[r, d * c:d * c + c]
+        np.testing.assert_array_equal(np.asarray(got_w), np.asarray(ref.w))
+        np.testing.assert_array_equal(np.asarray(got_b), np.asarray(ref.b))
+        np.testing.assert_array_equal(np.asarray(got_aw),
+                                      np.asarray(ref.accum_w))
+        np.testing.assert_array_equal(np.asarray(got_ab),
+                                      np.asarray(ref.accum_b))
+
+
+def test_calibration_stepwise_matches_driver(folded):
+    """compensate_layer_bias chunks (the tick-resumable path) == the
+    monolithic calibrate_and_compensate driver."""
+    hw = folded
+    offs = _chip()
+    rng = np.random.default_rng(8)
+    xcal = rng.uniform(-1, 1, (4, L)).astype(np.float32)
+    ref = tr.calibrate_and_compensate(hw, xcal, offs, CFG,
+                                      sa_noise_std=1.0, seed=0)
+    ref_hw, _ = m.as_hw_params(ref)
+
+    hwp, _ = m.as_hw_params(hw)
+    ideal = tr.calibration_ideal_counts(hw, xcal, CFG)
+    keys = tr.calibration_layer_keys(CFG, seed=0)
+    for name in CFG.imc_layer_names():
+        got = tr.compensate_layer_bias(hwp.bias[name], ideal[name],
+                                       offs[name], keys[name], 1.0)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(ref_hw.bias[name]),
+                                      err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# Hot swap / profile install
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_install_custom_matches_refolded_server(folded):
+    """A profile installed into a fresh server's stream serves
+    bit-identically to a dedicated server folded from the refolded
+    PackedHWParams — the per-slot riders ARE the refolded model."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                       chip_offsets=offs)
+    utts, labels = _utterances(4, seed=9)
+    sess = srv.customize("user", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=9), epochs_per_tick=5))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess)
+    res = sess.result
+    refolded = sess.refolded()
+    assert isinstance(refolded, m.PackedHWParams)
+
+    rng = np.random.default_rng(10)
+    wav = rng.uniform(-1, 1, L + 6 * HOP).astype(np.float32)
+
+    srv_a = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                         chip_offsets=offs, seed=11)
+    srv_a.install_custom("u", res)
+    srv_a.submit("u", wav)
+    srv_a.finish("u")
+    ev_a = srv_a.drain()
+
+    srv_b = StreamServer(refolded, CFG, hop=HOP, slots=2, use_kernel=True,
+                         chip_offsets=offs, seed=11)
+    srv_b.submit("u", wav)
+    srv_b.finish("u")
+    ev_b = srv_b.drain()
+    assert ev_a == ev_b
+    assert len(ev_a) == 7
+
+
+@pytest.mark.streaming
+def test_hot_swap_changes_only_the_target_slot(folded):
+    """After the swap, the target slot's rider rows hold the profile and
+    every other slot's rows still hold the base model."""
+    hw = folded
+    hwp, _ = m.as_hw_params(hw)
+    srv = StreamServer(hw, CFG, hop=HOP, slots=3, use_kernel=True)
+    rng = np.random.default_rng(12)
+    srv.submit("other", rng.uniform(-1, 1, L + 2 * HOP)
+               .astype(np.float32))
+    utts, labels = _utterances(3, seed=13)
+    sess = srv.customize("user", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=5), compensate=False))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess)
+    assert sess.phase == "swapped"
+
+    u_slot = srv._streams["user"].slot
+    o_slot = srv._streams["other"].slot
+    assert u_slot is not None and o_slot is not None
+    np.testing.assert_array_equal(
+        np.asarray(srv._slot_head_w[u_slot]), sess.result.fc_w)
+    np.testing.assert_array_equal(
+        np.asarray(srv._slot_head_w[o_slot]), np.asarray(hwp.fc_w))
+    for name in CFG.imc_layer_names():
+        np.testing.assert_array_equal(
+            np.asarray(srv._slot_delta[name][o_slot]), 0.0)
+    # compensate=False: the profile's biases equal the base (delta 0) and
+    # fine-tuning ran directly on the enrollment features
+    feats = tr.hw_features(hw, np.stack(sess.windows), CFG)
+    w_ref, b_ref = quantized_head_finetune(
+        jnp.asarray(feats), jnp.asarray(labels), hwp.fc_w, hwp.fc_b,
+        OnChipTrainConfig(epochs=5))
+    np.testing.assert_array_equal(sess.result.fc_w, np.asarray(w_ref))
+    np.testing.assert_array_equal(sess.result.fc_b, np.asarray(b_ref))
+
+
+# ---------------------------------------------------------------------------
+# Multi-hop wake replay (serving follow-on satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_multi_step_bitexact_vs_sequential(folded):
+    """stream_multi_step == n sequential stream_steps, SA noise field
+    included (per-absolute-column: the same columns get the same
+    realizations no matter how they are batched)."""
+    hw = folded
+    geom = make_stream_geometry(CFG, HOP)
+    audio = jax.random.uniform(jax.random.PRNGKey(14), (2, L + 3 * HOP),
+                               minval=-1, maxval=1)
+    keys = jnp.stack([jax.random.PRNGKey(1), jax.random.PRNGKey(2)])
+    _, st0 = sv.stream_init(hw, audio[:, :L], keys, CFG, geom,
+                            sa_noise_std=0.9, use_kernel=True)
+    st = st0
+    seq = []
+    for t in range(1, 4):
+        lg, st = sv.stream_step(hw, st,
+                                audio[:, L + (t - 1) * HOP:L + t * HOP],
+                                CFG, geom, sa_noise_std=0.9,
+                                use_kernel=True)
+        seq.append(np.asarray(lg))
+    lg_m, st_m = sv.stream_multi_step(hw, st0, audio[:, L:L + 3 * HOP],
+                                      CFG, geom, 3, sa_noise_std=0.9,
+                                      use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(lg_m),
+                                  np.stack(seq, axis=1))
+    for a, b in zip(jax.tree_util.tree_leaves(st_m),
+                    jax.tree_util.tree_leaves(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.streaming
+def test_wake_replay_is_one_launch(folded, monkeypatch):
+    """The wake replay drains its whole deferred run (margin + onset
+    hops) in ONE fused launch per IMC layer instead of one per hop."""
+    hw = folded
+    rng = np.random.default_rng(15)
+    wav = rng.uniform(-1, 1, L + 8 * HOP).astype(np.float32)
+    wav[L + 1 * HOP:L + 4 * HOP] *= 1e-4     # 3 silent hops, then speech
+    srv = StreamServer(hw, CFG, hop=HOP, slots=1, use_kernel=True,
+                       vad=VADConfig(threshold_on_db=-40.0,
+                                     threshold_off_db=-50.0,
+                                     ema=0.0, wake_margin=3, hang=0))
+    srv.submit("s", wav[:L + 4 * HOP])
+    srv.step()                               # admission
+    for _ in range(4):
+        srv.step()                           # loud hop, then 3 deferred
+    rec = srv._streams["s"]
+    assert len(rec.pending) == 3
+    srv.submit("s", wav[L + 4 * HOP:L + 5 * HOP])   # loud: wakes
+    jax.clear_caches()
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    events = srv.step()
+    assert len(events) == 4                  # 3 deferred + the onset hop
+    assert len(calls) == CFG.num_conv_layers - 1, calls

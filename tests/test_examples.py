@@ -1,0 +1,37 @@
+"""Smoke-run the runnable examples so they can't silently rot.
+
+Each example honours REPRO_EXAMPLES_SMOKE=1 (reduced window / stream
+count / epoch counts — seconds-scale, mechanics identical).  They run
+in-process via runpy (sharing the already-initialized JAX runtime), with
+stdout captured and a couple of landmark lines asserted.
+"""
+
+import os
+import runpy
+
+import pytest
+
+EXAMPLES = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _run(name, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_EXAMPLES_SMOKE", "1")
+    runpy.run_path(os.path.join(EXAMPLES, name), run_name="__main__")
+    return capsys.readouterr().out
+
+
+@pytest.mark.slow
+def test_customize_onchip_example(monkeypatch, capsys):
+    out = _run("customize_onchip.py", monkeypatch, capsys)
+    assert "before customization" in out
+    assert "+ SGA" in out
+    # the serving-session demo ran and matched the offline loop bit-exactly
+    assert "bit-identical to the offline loop" in out
+
+
+@pytest.mark.slow
+def test_stream_kws_example(monkeypatch, capsys):
+    out = _run("stream_kws.py", monkeypatch, capsys)
+    assert "serving 1 streams" in out
+    assert "decisions" in out
+    assert "VAD duty cycle" in out
