@@ -1,22 +1,33 @@
 #!/usr/bin/env python3
 """Docs consistency gate: fail CI if README.md or docs/*.md reference
 repo files, modules or CLI flags that do not exist, or carry rotten code
-snippets.
+snippets, dead cross-doc links, or stale benchmark-schema references.
 
 Checked reference forms (inside backticks only — prose is free):
 
 * path-like tokens whose first segment is a top-level repo directory
   (``src/...``, ``tests/...``) or that end in a known code/data extension
-  — must exist on disk (trailing ``:line`` / ``::member`` suffixes are
-  stripped);
+  — must exist on disk (trailing ``:line`` / ``::member`` / ``#key``
+  suffixes are stripped);
 * dotted module tokens ``repro.foo[.bar...]`` — ``src/repro/foo`` must
   exist as a package or module (deeper components may be attributes, so
   only the first level under ``repro`` is resolved);
 * ``--flag`` tokens — the literal flag string must appear in some .py or
   .sh file under the repo (catches renamed/removed CLI options);
+* bench-schema tokens ``results/BENCH_<x>.json#dotted.key.path`` — the
+  JSON file must exist AND contain the dotted key path (integer segments
+  index into lists), so docs describing a BENCH_*.json schema rot the
+  moment a bench stops recording a documented key;
 * fenced ```python blocks — each must compile, and its import statements
   are actually executed (with src/ on sys.path), so a renamed module or
   symbol breaks CI instead of silently rotting the snippet.
+
+Plus (anywhere in the markdown, not just backticks):
+
+* relative markdown links ``[text](path)`` — the target, resolved from
+  the linking document's directory, must exist (anchors are stripped;
+  absolute http(s)/mailto links are skipped) — dead cross-doc links
+  between README/docs/* fail CI.
 
 Run:  python scripts/check_docs.py
 """
@@ -24,6 +35,8 @@ Run:  python scripts/check_docs.py
 from __future__ import annotations
 
 import ast
+import glob
+import json
 import os
 import re
 import sys
@@ -54,8 +67,11 @@ def repo_sources():
 
 
 def extract_tokens(text):
-    """(paths, modules, flags) referenced in backtick spans."""
-    paths, modules, flags = set(), set(), set()
+    """(paths, modules, flags, bench_keys) referenced in backtick spans.
+
+    ``bench_keys`` are ``results/BENCH_<x>.json#dotted.key`` schema
+    references: (json_path, dotted_key) pairs."""
+    paths, modules, flags, bench_keys = set(), set(), set(), set()
     for span in re.findall(r"`([^`\n]+)`", text):
         for word in span.split():
             word = word.strip(",;:()[]{}\"'")
@@ -64,13 +80,65 @@ def extract_tokens(text):
                 continue
             word = word.split("::")[0]
             word = re.sub(r":\d+(-\d+)?$", "", word)
+            m = re.fullmatch(r"(results/BENCH_\w+\.json)#([\w.\-]+)", word)
+            if m:
+                bench_keys.add((m.group(1), m.group(2)))
+            word = word.split("#")[0]      # other anchors: path part only
             if re.fullmatch(r"repro(\.[A-Za-z_]\w*)+", word):
                 modules.add(word)
             elif "/" in word and not word.startswith(("http:", "https:")):
                 first = word.split("/")[0]
                 if first in TOP_DIRS or word.endswith(EXTS):
                     paths.add(word.rstrip("/"))
-    return paths, modules, flags
+    return paths, modules, flags, bench_keys
+
+
+def extract_md_links(text):
+    """Relative markdown link targets ``[text](target)`` (anchors
+    stripped; external/absolute/anchor-only links skipped)."""
+    out = set()
+    for target in re.findall(r"\[[^\]\n]*\]\(([^)\s]+)\)", text):
+        target = target.split("#")[0]
+        if not target or target.startswith(("http:", "https:", "mailto:",
+                                            "/")):
+            continue
+        out.add(target)
+    return out
+
+
+def check_bench_key(json_rel, dotted, problems, rel, cache):
+    """Walk a dotted key path through a bench JSON (int segments index
+    lists); records a problem if the file or any segment is missing."""
+    path = os.path.join(ROOT, json_rel)
+    if json_rel not in cache:
+        try:
+            with open(path) as f:
+                cache[json_rel] = json.load(f)
+        except (OSError, ValueError) as e:
+            cache[json_rel] = e
+    node = cache[json_rel]
+    if isinstance(node, Exception):
+        problems.append(f"{rel}: bench ref `{json_rel}#{dotted}` — "
+                        f"cannot load {json_rel}: {cache[json_rel]}")
+        return
+    walked = []
+    for seg in dotted.split("."):
+        walked.append(seg)
+        if isinstance(node, list) and re.fullmatch(r"\d+", seg):
+            idx = int(seg)
+            if idx >= len(node):
+                problems.append(
+                    f"{rel}: bench ref `{json_rel}#{dotted}` — index "
+                    f"{'.'.join(walked)} out of range")
+                return
+            node = node[idx]
+        elif isinstance(node, dict) and seg in node:
+            node = node[seg]
+        else:
+            problems.append(
+                f"{rel}: bench ref `{json_rel}#{dotted}` — key "
+                f"`{'.'.join(walked)}` not in the recorded schema")
+            return
 
 
 def extract_python_fences(text):
@@ -108,14 +176,28 @@ def check_snippet(rel, idx, code, problems):
 def main() -> int:
     missing = []
     flag_corpus = None
+    bench_cache = {}
     for doc in doc_files():
         rel = os.path.relpath(doc, ROOT)
         with open(doc) as f:
             text = f.read()
-        paths, modules, flags = extract_tokens(text)
+        paths, modules, flags, bench_keys = extract_tokens(text)
         for p in sorted(paths):
-            if not os.path.exists(os.path.join(ROOT, p)):
+            if "*" in p or "?" in p:
+                if not glob.glob(os.path.join(ROOT, p)):
+                    missing.append(
+                        f"{rel}: glob `{p}` matches nothing")
+            elif not os.path.exists(os.path.join(ROOT, p)):
                 missing.append(f"{rel}: path `{p}` does not exist")
+        for target in sorted(extract_md_links(text)):
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(doc), target))
+            if not os.path.exists(resolved):
+                missing.append(
+                    f"{rel}: markdown link `{target}` does not resolve "
+                    f"({os.path.relpath(resolved, ROOT)})")
+        for json_rel, dotted in sorted(bench_keys):
+            check_bench_key(json_rel, dotted, missing, rel, bench_cache)
         for mod in sorted(modules):
             parts = mod.split(".")
             base = os.path.join(ROOT, "src", parts[0],

@@ -37,8 +37,11 @@ python -m pytest -x -q -m "streaming and not slow" tests/test_serving.py
 # gating-equivalence gate (explicit, so a marker edit can't silently drop it)
 python -m pytest -x -q tests/test_serving.py \
     -k "gated_forced_speech_bitexact or wake_margin_replays"
-# customization-equivalence gate (session == offline loop; one launch per
-# layer on mixed inference+learning ticks)
+# customization-equivalence gate (session == offline loop — clean AND
+# SA-noise-field configs, the -k prefix matches both; one launch per
+# layer on mixed inference+learning ticks; batched replay-wave init ==
+# sequential; profiles restored from disk serve bit-identically)
 python -m pytest -x -q tests/test_customize.py \
-    -k "session_matches_offline_loop or mixed_tick_one_fused_launch"
+    -k "session_matches_offline_loop or mixed_tick_one_fused_launch \
+        or batched_replay_init or profile_store_restart"
 python scripts/check_docs.py

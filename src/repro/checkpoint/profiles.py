@@ -1,0 +1,174 @@
+"""Persistent store for per-user customization profiles.
+
+A finished enrollment session (repro.serving.customize) produces a
+``CustomizationResult`` — compensated integer IMC biases, the fine-tuned
+Q1.7 head, and the run's accounting.  At fleet scale that profile must
+outlive the serving process: a user who enrolled once expects their
+accuracy back after every server restart.  This module wires the result
+into the checkpoint layer so ``StreamServer.install_custom`` can restore
+profiles from disk, **bit-identical** to the pre-restart stream (the
+arrays are exact fixed-point/integer grids, stored losslessly as .npz).
+
+Storage layout: ONE ``<root>/<user_id>.npz`` file per user, holding the
+``bias.<layer>`` arrays, ``fc_w``/``fc_b``, and the JSON-encoded
+metadata (epochs, n_utterances, history, energy) as a ``meta`` entry.
+A single file is what makes writes genuinely atomic: the profile is
+serialized beside its destination, flushed and fsynced, then
+``os.replace``d into place — a crash mid-save (including a re-save over
+an existing profile) leaves either the complete old profile or the
+complete new one, never a mix and never neither.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import List, Optional
+
+import numpy as np
+
+_ID_RE = re.compile(r"^[A-Za-z0-9][A-Za-z0-9._-]*$")
+
+
+def _check_id(user_id: str) -> str:
+    if not _ID_RE.fullmatch(user_id):
+        raise ValueError(
+            f"invalid profile id {user_id!r}: use letters, digits, '.', "
+            f"'_' or '-' (must not start with a separator)")
+    return user_id
+
+
+def save_profile(path: str, result, seq: Optional[int] = None) -> str:
+    """Serialize one CustomizationResult to ``path`` (a .npz file),
+    atomically: tmp file + fsync + ``os.replace`` — safe against crashes
+    even when overwriting an existing profile.  ``seq`` is an optional
+    monotonic save counter (``ProfileStore`` maintains it so ``latest``
+    is deterministic on coarse-mtime filesystems).  Returns ``path``."""
+    parent = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(parent, exist_ok=True)
+    arrays = {f"bias.{name}": np.asarray(v)
+              for name, v in result.bias.items()}
+    arrays["fc_w"] = np.asarray(result.fc_w)
+    arrays["fc_b"] = np.asarray(result.fc_b)
+    meta = {
+        "epochs": int(result.epochs),
+        "n_utterances": int(result.n_utterances),
+        "history": result.history,
+        "energy": result.energy,
+        "bias_layers": sorted(result.bias.keys()),
+    }
+    if seq is not None:
+        meta["seq"] = int(seq)
+    arrays["meta"] = np.frombuffer(
+        json.dumps(meta).encode("utf-8"), dtype=np.uint8)
+    fd, tmp = tempfile.mkstemp(prefix=".tmp.profile.", suffix=".npz",
+                               dir=parent)
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)                      # atomic commit
+    except Exception:
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+def load_profile(path: str):
+    """Load a profile saved by ``save_profile``.  Returns a
+    CustomizationResult whose arrays are bit-identical to the saved ones
+    (lossless .npz round trip on the fixed-point grids)."""
+    from repro.serving.customize import CustomizationResult
+
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(bytes(data["meta"]).decode("utf-8"))
+        bias = {name: data[f"bias.{name}"]
+                for name in meta["bias_layers"]}
+        return CustomizationResult(
+            bias=bias, fc_w=data["fc_w"], fc_b=data["fc_b"],
+            epochs=meta["epochs"], n_utterances=meta["n_utterances"],
+            history=meta["history"], energy=meta["energy"])
+
+
+class ProfileStore:
+    """Directory of per-user customization profiles.
+
+    ::
+
+        store = ProfileStore("profiles/")
+        store.save("alice", session.result)      # after enrollment
+        ...                                      # server restarts
+        srv.install_custom("alice-mic", store.load("alice"))
+
+    The restored stream serves bit-identically to the pre-restart one
+    (test-enforced: tests/test_customize.py profile round-trip)."""
+
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self._max_seq: Optional[int] = None    # scanned once, then kept
+
+    def _path(self, user_id: str) -> str:
+        return os.path.join(self.dir, _check_id(user_id) + ".npz")
+
+    def _seq(self, user_id: str) -> int:
+        """The stored save counter (0 for pre-seq files)."""
+        with np.load(self._path(user_id), allow_pickle=False) as data:
+            meta = json.loads(bytes(data["meta"]).decode("utf-8"))
+        return int(meta.get("seq", 0))
+
+    def save(self, user_id: str, result) -> str:
+        """Atomically persist ``result`` under ``user_id`` (replacing any
+        previous profile).  Returns the profile path.  O(1) after the
+        first save: the monotonic counter behind ``latest`` is scanned
+        from disk once per store instance, then maintained in memory."""
+        if self._max_seq is None:
+            self._max_seq = max((self._seq(u) for u in self.list()),
+                                default=0)
+        seq = self._max_seq + 1
+        path = save_profile(self._path(user_id), result, seq=seq)
+        self._max_seq = seq
+        return path
+
+    def load(self, user_id: str):
+        """The stored CustomizationResult (raises FileNotFoundError if
+        the user never enrolled)."""
+        path = self._path(user_id)
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no stored profile for {user_id!r}")
+        return load_profile(path)
+
+    def exists(self, user_id: str) -> bool:
+        return os.path.exists(self._path(user_id))
+
+    def list(self) -> List[str]:
+        """User ids with a stored profile."""
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            if name.endswith(".npz") and _ID_RE.fullmatch(name[:-4]):
+                out.append(name[:-4])
+        return out
+
+    def delete(self, user_id: str) -> bool:
+        """Remove a stored profile; returns whether one existed."""
+        path = self._path(user_id)
+        try:
+            os.remove(path)
+            return True
+        except FileNotFoundError:
+            return False
+
+    def latest(self) -> Optional[str]:
+        """Most recently saved user id (by the monotonic save counter —
+        deterministic on coarse-mtime filesystems), or None."""
+        ids = self.list()
+        if not ids:
+            return None
+        return max(ids, key=lambda u: (self._seq(u),
+                                       os.path.getmtime(self._path(u))))

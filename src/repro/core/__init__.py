@@ -4,9 +4,9 @@ chip energy model and the distributed generalization (gradient compression
 with error feedback)."""
 
 from repro.core import binary, compensation, energy, grad_compress, imc
-from repro.core import onchip_training, quantize
+from repro.core import onchip_training, quantize, sa_noise
 
 __all__ = [
     "binary", "compensation", "energy", "grad_compress", "imc",
-    "onchip_training", "quantize",
+    "onchip_training", "quantize", "sa_noise",
 ]

@@ -107,6 +107,13 @@ class OnChipTrainConfig:
     error_scaling: bool = True
     # None -> dynamic Eq(2) per batch; the paper's chip fixes 1.375 (=1+1/4+1/8)
     fixed_error_scale: Optional[float] = None
+    # dynamic-exponent variant (ignored with fixed_error_scale):
+    # 'ceil' = the paper's Eq(2) — scaled-max lands AT/ABOVE the Q1.7
+    # rail every batch (saturation can stall learning on weakly separated
+    # features); 'floor' keeps one bit of headroom (scaled-max <= 1).
+    # error_scale_max_exponent clamps the shift from above.
+    error_scale_mode: str = "ceil"
+    error_scale_max_exponent: Optional[int] = None
     sga: bool = True
     rgp: bool = False
     rgp_lambda: float = 8.0
@@ -165,7 +172,10 @@ def epoch_grads(state: HeadState, epoch: jax.Array, features_q: jax.Array,
             if cfg.fixed_error_scale is not None:
                 scale = jnp.float32(cfg.fixed_error_scale)
             else:
-                scale = jnp.exp2(error_scale_exponent(err).astype(jnp.float32))
+                scale = jnp.exp2(error_scale_exponent(
+                    err, mode=cfg.error_scale_mode,
+                    max_exponent=cfg.error_scale_max_exponent
+                ).astype(jnp.float32))
         else:
             scale = jnp.float32(1.0)
         err = cfg.error_fmt.quantize(err * scale)

@@ -98,30 +98,59 @@ def quantize_ste(x: jax.Array, fmt: QFormat) -> jax.Array:
     return fmt.quantize_ste(x)
 
 
-def error_scale_exponent(error: jax.Array) -> jax.Array:
-    """Eq (2): s = ceil(log2(1 / max|error|)).
+def error_scale_exponent(error: jax.Array, mode: str = "ceil",
+                         max_exponent: Optional[int] = None) -> jax.Array:
+    """Eq (2): s = ceil(log2(1 / max|error|)) — plus the floored/clamped
+    variants the dynamic form needs in practice.
 
-    Computed in integer/shift-friendly form; returns an int32 scalar.  A zero
-    error tensor yields s = 0 (nothing to scale).
+    Computed in integer/shift-friendly form; returns an int32 scalar.  A
+    zero error tensor yields s = 0 (nothing to scale).
+
+    ``mode="ceil"`` is the paper's Eq (2).  Note its fixed point: by
+    construction 2**s * max|error| lands in [1, 2) — i.e. the largest
+    scaled error sits AT or ABOVE the Q1.7 rail every batch, so on weakly
+    separated features the dominant error saturates and learning can
+    stall (the chip's fixed 1.375 factor recovers cleanly on the same
+    features; see ``benchmarks/run.py --customize``'s ablation).
+
+    ``mode="floor"`` takes s = floor(log2(1/max|error|)) instead:
+    2**s * max|error| lands in (1/2, 1] — one bit of headroom, so the
+    dominant error stays on-grid (it only touches the rail when
+    max|error| is an exact power of two) while sub-LSB errors are still
+    rescued from truncation.
+
+    ``max_exponent`` clamps s from above (both modes): a hard bound on
+    the barrel shifter, and a guard against pathological all-tiny error
+    batches being amplified into pure quantization noise.
     """
+    if mode not in ("ceil", "floor"):
+        raise ValueError(f"mode={mode!r} must be 'ceil' or 'floor'")
     m = jnp.max(jnp.abs(error))
     safe = jnp.maximum(m, jnp.finfo(jnp.float32).tiny)
-    s = jnp.ceil(jnp.log2(1.0 / safe)).astype(jnp.int32)
+    log = jnp.log2(1.0 / safe)
+    s = (jnp.ceil(log) if mode == "ceil"
+         else jnp.floor(log)).astype(jnp.int32)
+    if max_exponent is not None:
+        s = jnp.minimum(s, jnp.int32(max_exponent))
     return jnp.where(m > 0, s, jnp.int32(0))
 
 
 def scale_error(error: jax.Array, fmt: QFormat = ERROR_Q,
-                fixed_scale: Optional[float] = None):
+                fixed_scale: Optional[float] = None,
+                mode: str = "ceil",
+                max_exponent: Optional[int] = None):
     """Eq (1): ScaleError = error * 2**s, then quantize to ``fmt``.
 
     If ``fixed_scale`` is given it is used verbatim (the hardware mode: the
     paper fixes the factor to 1.375 = 1 + 1/4 + 1/8, shift-and-add friendly).
-    Returns (scaled_quantized_error, scale_used).
+    ``mode``/``max_exponent`` select the dynamic exponent variant (see
+    ``error_scale_exponent``).  Returns (scaled_quantized_error,
+    scale_used).
     """
     if fixed_scale is not None:
         scale = jnp.float32(fixed_scale)
     else:
-        s = error_scale_exponent(error)
+        s = error_scale_exponent(error, mode=mode, max_exponent=max_exponent)
         scale = jnp.exp2(s.astype(jnp.float32))
     return fmt.quantize(error * scale), scale
 

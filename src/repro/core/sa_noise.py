@@ -1,0 +1,108 @@
+"""The per-absolute-column sense-amplifier noise field (hardware model).
+
+The silicon evaluates every activation column of every IMC layer through
+the sense amplifiers exactly once; the SA read noise of that evaluation is
+a property of the (stream, layer, column) triple, not of whichever code
+path happens to compute it.  We model that as a deterministic *field*:
+
+    noise(stream_key, layer, absolute_column)
+        = std * normal(fold_in(fold_in(stream_key, layer), absolute_column))
+
+so cached columns keep their realization across hops, a multi-hop batch
+evaluates the same values as hop-by-hop stepping, and an *offline* window
+forward can reproduce the streaming path bit-exactly by evaluating the
+same field (``hw_forward(sa_noise_field=...)``).
+
+This module is the field's single source of truth.  The serving layer
+(repro.serving.stream) builds its per-hop tail evaluations from
+``sa_noise_columns``; the offline oracle side (repro.models.kws.hw_forward,
+repro.training.kws.hw_features / evaluate_hw) consumes an ``SANoiseField``
+— a batch of (stream key, window index) pairs plus the hop size — and
+expands it to full-window per-layer realizations with
+``field_window_noise``.  That is what closes the customization
+equivalence contract under SA noise: an enrollment session's captured
+features follow each stream's own field, and the offline loop evaluates
+the identical field instead of drawing fresh noise.
+
+``cfg`` arguments are duck-typed (any object with ``num_conv_layers``,
+``kernels``, ``strides``, ``pools``, ``channels`` and ``sample_len``), so
+core stays import-free of the model layer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SANoiseField(NamedTuple):
+    """A batch of window-positions inside per-stream noise fields.
+
+    keys: (N, 2) uint32 per-stream field keys (the stream's PRNG key —
+          the server derives them as ``fold_in(base_key, stream_uid)``);
+    hops: (N,) int32 window indices — window ``t`` of a stream occupies
+          samples ``[t*hop, t*hop + window)`` and its layer-l conv
+          columns sit at absolute indices ``t*n_new_l + local``;
+    std:  the SA read-noise sigma (in counts);
+    hop:  the stream hop in samples (must be a multiple of
+          ``repro.serving.stream.hop_alignment(cfg)`` for the absolute
+          column indexing to be exact).
+    """
+
+    keys: jax.Array
+    hops: jax.Array
+    std: float
+    hop: int
+
+
+def sa_noise_columns(key: jax.Array, layer: int, cols: jax.Array,
+                     c_out: int, std: float) -> jax.Array:
+    """Field values for one stream: (n_cols,) absolute conv column
+    indices -> (n_cols, c_out).  Column ``a`` of layer ``l`` always yields
+    the same realization for the same stream key — the SA evaluates each
+    column once, and its noise sample is a property of that evaluation."""
+    base = jax.random.fold_in(key, layer)
+    return std * jax.vmap(
+        lambda a: jax.random.normal(jax.random.fold_in(base, a),
+                                    (c_out,)))(cols)
+
+
+def layer_window_cols(cfg, hop: int) -> Dict[str, tuple]:
+    """Per conv layer: ``(t_conv, n_new)`` — the full-window conv length
+    and the fresh conv columns one hop contributes.  Matches the serving
+    geometry (repro.serving.stream.make_stream_geometry) without needing
+    it: both walk the same stride/pool recurrence."""
+    t_in, d_in = cfg.sample_len, hop
+    out = {}
+    for i in range(cfg.num_conv_layers):
+        k, s, p = cfg.kernels[i], cfg.strides[i], cfg.pools[i]
+        t_conv = (t_in - k) // s + 1
+        n_new = d_in // s
+        out[f"conv{i}"] = (t_conv, n_new)
+        t_in, d_in = t_conv // p, n_new // p
+    return out
+
+
+def field_window_noise(field: SANoiseField, cfg) -> Dict[str, jax.Array]:
+    """Expand a field batch to full-window per-layer realizations:
+    {conv_i: (N, t_conv_i, C_i)}, the ``hw_forward(sa_noise=...)`` layout.
+
+    Row ``n`` evaluates stream ``keys[n]``'s field at window ``hops[n]``
+    — bit-identical to the values the streaming path cached for those
+    columns, which is what makes ``hw_forward(sa_noise_field=...)`` the
+    offline oracle of a live stream (or of a customization session's
+    feature captures) under SA noise."""
+    cols_info = layer_window_cols(cfg, field.hop)
+
+    def one(key, t):
+        out = {}
+        for i in range(1, cfg.num_conv_layers):
+            t_conv, n_new = cols_info[f"conv{i}"]
+            cols = t * n_new + jnp.arange(t_conv)
+            out[f"conv{i}"] = sa_noise_columns(key, i, cols,
+                                               cfg.channels[i], field.std)
+        return out
+
+    return jax.vmap(one)(field.keys, field.hops)

@@ -36,6 +36,7 @@ from repro.core import imc
 from repro.core.binary import (binarize, binarize_sg, channel_shuffle,
                                or_maxpool, rsign)
 from repro.core.quantize import ACT_Q, WEIGHT_Q
+from repro.core.sa_noise import SANoiseField, field_window_noise
 
 # ---------------------------------------------------------------------------
 # Config
@@ -436,7 +437,8 @@ def hw_forward(hw, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
                rng: Optional[jax.Array] = None,
                collect_counts: bool = False,
                use_kernel: bool = False,
-               sa_noise: Optional[Dict[str, jax.Array]] = None):
+               sa_noise: Optional[Dict[str, jax.Array]] = None,
+               sa_noise_field: Optional[SANoiseField] = None):
     """The silicon path: integer counts -> in-memory BN -> SA sign.
 
     ``hw`` is an HWParams or a PackedHWParams (fold-time packed fused-kernel
@@ -452,12 +454,26 @@ def hw_forward(hw, x: jax.Array, cfg: KWSConfig = PAPER_KWS,
     (the chip's digitize-the-counts test mode) forces the unfused path, since
     the fused kernel never materializes counts — exactly like the silicon.
 
-    SA noise comes from ``rng``/``sa_noise_std`` (fresh draw per layer) or
-    from ``sa_noise``, an explicit per-layer dict of (B, t_conv, C_out)
-    pre-pool realizations — the streaming equivalence contract
-    (repro.serving.stream) uses the explicit form so offline windows can
-    reproduce the per-absolute-column noise field bit-exactly."""
+    SA noise comes from ``rng``/``sa_noise_std`` (fresh draw per layer),
+    from ``sa_noise`` — an explicit per-layer dict of (B, t_conv, C_out)
+    pre-pool realizations — or from ``sa_noise_field``, a
+    ``repro.core.sa_noise.SANoiseField`` batch of (stream key, window
+    index) pairs that is expanded to the same explicit form.  The
+    streaming equivalence contract (repro.serving.stream) and the
+    customization oracle (repro.training.kws.hw_features) use the
+    field/explicit forms so offline windows reproduce the
+    per-absolute-column noise field bit-exactly."""
     hw, packed_all = as_hw_params(hw)
+    if sa_noise_field is not None:
+        if sa_noise is not None or rng is not None or sa_noise_std > 0.0:
+            raise ValueError("pass only one of rng / sa_noise / "
+                             "sa_noise_std / sa_noise_field")
+        if sa_noise_field.keys.shape[0] != x.shape[0]:
+            raise ValueError(
+                f"sa_noise_field has {sa_noise_field.keys.shape[0]} rows "
+                f"for a batch of {x.shape[0]}")
+        sa_noise = field_window_noise(sa_noise_field, cfg)
+        sa_noise_std = sa_noise_field.std
     if rng is not None and sa_noise is not None:
         raise ValueError("pass either rng or explicit sa_noise, not both")
     counts_log: Dict[str, jax.Array] = {}

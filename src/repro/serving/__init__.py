@@ -26,12 +26,18 @@ Bit-exactness contracts: N hops of the streaming path equal ``hw_forward``
 on each full window — noise and chip-offset configurations included;
 ``streaming=False`` falls back to exactly that recompute path; gated
 serving with the VAD forced to "speech" is bit-identical to ungated
-serving (silence never computes, so all-speech audio never gates); and a
+serving (silence never computes, so all-speech audio never gates); a
 customization session driven through scheduler ticks equals the offline
 customize loop on the same utterances (compensated biases + fine-tuned
-head, SA-noise-free configurations).
+head) — chip offsets AND SA-noise fields included, the offline oracle
+evaluating the session's recorded per-absolute-column field
+(``repro.core.sa_noise``); batched admission waves equal sequential B=1
+admissions; and a profile persisted via
+``repro.checkpoint.profiles.ProfileStore`` restores bit-identically
+after a restart.
 """
 
+from repro.core.sa_noise import SANoiseField
 from repro.serving.customize import (CustomizationResult,
                                      CustomizationSession, CustomizeConfig)
 from repro.serving.decision import (DecisionConfig, DecisionOut,
@@ -52,8 +58,8 @@ from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
 __all__ = [
     "AdmissionConfig", "CustomizationResult", "CustomizationSession",
     "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
-    "DynamicHopConfig", "StreamServer", "StreamEngine", "StreamGeometry",
-    "StreamState", "VADConfig", "VADState", "decision_init",
+    "DynamicHopConfig", "SANoiseField", "StreamServer", "StreamEngine",
+    "StreamGeometry", "StreamState", "VADConfig", "VADState", "decision_init",
     "decision_step", "frame_energy_db", "gated_step", "gated_window_step",
     "hop_alignment", "hop_sa_noise_fields", "make_stream_geometry",
     "sa_noise_columns", "silence_fills", "stream_init", "stream_multi_step",

@@ -39,16 +39,21 @@ paper's pipeline as scheduler-ticked background jobs:
    ``PackedHWParams`` for persistence, and
    ``StreamServer.install_custom`` re-installs a saved profile.
 
-**Equivalence contract** (test-enforced, SA-noise-free configurations —
-chip offsets included): the session's compensated biases and fine-tuned
-(w, b) are bit-identical to the offline loop on the same recorded
-utterances (``calibrate_and_compensate`` -> ``hw_features`` ->
-``quantized_head_finetune``).  Everything in the streaming path that the
-session touches is exact on the fixed-point grids: the bias delta is an
-integer rider on the pre-sign operand, and the GAP/FC math has no
-float rounding (±1 ring sums and Q1.3.4 x Q1.7 dot products are exactly
-representable), so the per-slot head matvec equals the shared matmul
-bit-for-bit.
+**Equivalence contract** (test-enforced, chip offsets AND SA-noise
+configurations included): the session's compensated biases and
+fine-tuned (w, b) are bit-identical to the offline loop on the same
+recorded utterances (``calibrate_and_compensate`` -> ``hw_features`` ->
+``quantized_head_finetune``).  Under an SA-noise field, every feature
+capture follows its stream's per-absolute-column field
+(repro.core.sa_noise); the session records each capture's (stream key,
+window index) origin, and ``session.feature_noise_field()`` hands the
+offline oracle the exact same field to evaluate
+(``hw_features(sa_noise_field=...)``) instead of drawing fresh noise.
+Everything in the streaming path that the session touches is exact on
+the fixed-point grids: the bias delta is an integer rider on the
+pre-sign operand, and the GAP/FC math has no float rounding (±1 ring
+sums and Q1.3.4 x Q1.7 dot products are exactly representable), so the
+per-slot head matvec equals the shared matmul bit-for-bit.
 """
 
 from __future__ import annotations
@@ -56,10 +61,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import energy
+from repro.core.sa_noise import SANoiseField
 from repro.core.onchip_training import (HeadState, OnChipTrainConfig,
                                         apply_update, epoch_grads,
                                         finetune_init, head_accuracy,
@@ -174,6 +181,10 @@ class CustomizationSession:
         self.windows: List[np.ndarray] = []      # recorded utterance windows
         self.labels: List[int] = []
         self.features: List[Optional[np.ndarray]] = []
+        # per-feature noise-field origin: {"key": (2,) uint32, "hop": int}
+        # — which stream's field, at which window index, produced the
+        # capture (the offline oracle's coordinates under SA noise)
+        self.feature_origins: List[Optional[dict]] = []
         self.history: List[dict] = []
         self.result: Optional[CustomizationResult] = None
         self._enroll_done = False
@@ -215,6 +226,7 @@ class CustomizationSession:
         self.windows.append(utterance.copy())
         self.labels.append(int(label))
         self.features.append(None)
+        self.feature_origins.append(None)
         self._captures.append({"stream": self.stream_id,
                                "target": self._total,
                                "index": len(self.windows) - 1,
@@ -236,6 +248,27 @@ class CustomizationSession:
             raise ValueError("session not finished")
         return refold(self.result, self._mgr.srv._hw, self._mgr.srv.cfg,
                       pack=pack)
+
+    def feature_noise_field(self) -> Optional[SANoiseField]:
+        """The per-absolute-column SA-noise field the session's feature
+        buffer was captured under: row n is feature n's (stream key,
+        window index).  Feed it to ``repro.training.kws.hw_features(
+        sa_noise_field=...)`` and the offline forward reproduces the
+        captured features bit-exactly — the noise-aware offline oracle of
+        the session-vs-offline equivalence contract.  ``None`` when the
+        server runs noise-free (the oracle then draws nothing)."""
+        std = self._mgr.srv._engine_kw["sa_noise_std"]
+        if not std:
+            return None
+        if any(o is None for o in self.feature_origins):
+            raise ValueError("feature buffer not fully captured yet "
+                             f"(phase {self.phase})")
+        return SANoiseField(
+            keys=jnp.asarray(np.stack([o["key"]
+                                       for o in self.feature_origins])),
+            hops=jnp.asarray([o["hop"] for o in self.feature_origins],
+                             jnp.int32),
+            std=float(std), hop=int(self._mgr.srv.geom.hop))
 
 
 class CustomizationManager:
@@ -299,6 +332,16 @@ class CustomizationManager:
                 feats = np.asarray(ACT_Q.quantize(jnp.mean(ring, axis=0)),
                                    np.float32)
                 sess.features[cap["index"]] = feats
+                # the capture's noise-field coordinates: this stream's key
+                # at the completion window's index — what the offline
+                # oracle must evaluate to reproduce the feature under SA
+                # noise (window t occupies [t*hop, t*hop + window))
+                sess.feature_origins[cap["index"]] = {
+                    "key": np.asarray(jax.random.fold_in(srv._base_key,
+                                                         rec.uid)),
+                    "hop": (cap["target"] - srv.geom.window)
+                    // srv.geom.hop,
+                }
                 if cap["kind"] == "enroll":
                     sess.windows[cap["index"]] = rec.recent.copy()
                 else:                      # replay stream: single-use
@@ -353,6 +396,7 @@ class CustomizationManager:
         if sess._calib_idx >= len(names):
             sess._ideal = None             # free the counts log
             sess.features = [None] * len(sess.windows)
+            sess.feature_origins = [None] * len(sess.windows)
             sess.phase = "extracting"
 
     # -- feature re-extraction under the compensated biases ------------------

@@ -62,7 +62,12 @@ Host side, each stream owns a ring buffer of pending samples
 free slot immediately, waits in the admission queue otherwise, and is
 evicted when its producer calls ``finish()`` and its buffer drains (or
 explicitly via ``evict()``).  Admission runs the stream's first full
-window (``stream_init``) and scatters the result into the slot.
+window (``stream_init``): with ``batch_init`` (default) every slot whose
+first window is ready this tick — fresh admissions and a customization
+session's whole wave of feature-replay streams alike — initializes in
+ONE masked batched ``stream_init`` call (one fused launch per IMC layer
+for the wave, bit-identical to one-at-a-time; ``batch_init=False`` keeps
+the sequential B=1 path).
 
 **Customization** (``customize(stream_id)`` / ``install_custom``): an
 enrollment/fine-tuning session (repro.serving.customize) rides the same
@@ -210,10 +215,12 @@ class StreamServer:
                  vad: Optional[vd.VADConfig] = None,
                  dynamic_hop: Optional[DynamicHopConfig] = None,
                  admission: Optional[AdmissionConfig] = None,
+                 batch_init: bool = True,
                  seed: int = 0):
         self.cfg = cfg
         self.streaming = streaming
         self.base_hop = hop
+        self.batch_init = batch_init
         self.dcfg = decision
         self.vcfg = vad
         self.hcfg = dynamic_hop
@@ -275,6 +282,15 @@ class StreamServer:
         self._pressure_ticks = 0
         self._idle_ticks = 0
         self._hop_retargets = 0
+        # batched-compute accounting: each counter is one batched jax call
+        # = one fused-kernel launch per IMC layer (however many slots /
+        # sessions ride it) — zero IMC launches for gate calls.  The
+        # concurrent-session bench derives its one-launch-per-layer-per-
+        # tick assertion from per-tick deltas of these.
+        self._init_calls = 0               # batched stream_init waves
+        self._hop_calls = 0                # batched single-hop calls
+        self._replay_calls = 0             # multi-hop wake-replay calls
+        self._gate_calls = 0               # masked no-op fill calls
 
         self._decide = jax.jit(
             lambda dstate, logits, active: dec.decision_step(
@@ -298,7 +314,25 @@ class StreamServer:
                 logits, new_state = _step(state, audio)
                 return logits, _select_state(mask, new_state, state)
 
+            # masked batched init: a whole admission wave — live streams
+            # and session replay streams alike — runs its first full
+            # window in ONE stream_init call (one fused launch per IMC
+            # layer for the wave) instead of a B=1 launch per admission;
+            # rows not in the mask keep their state verbatim
+            def init_masked(state, windows, keys, mask, _init=eng._init):
+                logits, new_state = _init(windows, keys)
+                return logits, _select_state(mask, new_state, state)
+
             step_fn = sv.stream_step if self.streaming else sv.window_step
+            init_fn = sv.stream_init if self.streaming else sv.window_init
+
+            def init_cust_masked(state, windows, keys, mask, deltas, hw_,
+                                 hb_, _kw=eng._kw, _geom=eng.geom):
+                logits, new_state = init_fn(self._hw, windows, keys,
+                                            self.cfg, _geom, **_kw,
+                                            bias_delta=deltas, head_w=hw_,
+                                            head_b=hb_)
+                return logits, _select_state(mask, new_state, state)
 
             def hop_cust_masked(state, audio, mask, deltas, hw_, hb_,
                                 _kw=eng._kw, _geom=eng.geom):
@@ -326,6 +360,8 @@ class StreamServer:
 
             self._mults[mult] = {"engine": eng, "hop": jax.jit(hop_masked),
                                  "hop_cust": jax.jit(hop_cust_masked),
+                                 "init": jax.jit(init_masked),
+                                 "init_cust": jax.jit(init_cust_masked),
                                  "gate": jax.jit(gate_masked),
                                  "gate_cust": jax.jit(gate_cust_masked),
                                  "replay": {}, "replay_cust": {}}
@@ -752,17 +788,73 @@ class StreamServer:
 
     def _admit_ready(self):
         """Initialize any slotted stream whose buffer holds a full window.
-        Returns (init_mask, init_logits) rows for this step's decisions."""
+        Returns (init_mask, init_logits) rows for this step's decisions.
+
+        With ``batch_init`` (the default) the whole wave of ready slots —
+        fresh admissions and session feature-replay streams alike — runs
+        its first windows in ONE masked ``stream_init`` call: one fused
+        launch per IMC layer for the wave, instead of a B=1 launch per
+        admission (the enrollment-phase launch saving; bit-identical, the
+        init math is row-parallel and exact on the fixed-point grids)."""
         window = self.geom.window
         init_mask = np.zeros((self.slots,), bool)
         init_logits = np.zeros((self.slots, self.cfg.num_classes),
                                np.float32)
-        for s, rec in enumerate(self._slots):
-            if rec is None or rec.initialized or len(rec.buf) < window:
-                continue
+        todo = [(s, rec) for s, rec in enumerate(self._slots)
+                if rec is not None and not rec.initialized
+                and len(rec.buf) >= window]
+        if not todo:
+            return init_mask, init_logits
+
+        def _book(rec, s, first, dt):
+            rec.wall_s += dt
+            rec.initialized = True
+            rec.hops += 1
+            rec.consumed += window
+            rec.recent = first.copy()
+            rec.pending = []
+            rec.silent_run = 0
+            self._dstate = dec.reset_slot(self._dstate, s)
+            if self._vstate is not None:
+                self._vstate = vd.vad_reset_slot(self._vstate, s)
+            init_mask[s] = True
+
+        if self.batch_init:
+            windows = np.zeros((self.slots, window), np.float32)
+            keys = np.zeros((self.slots, 2), np.uint32)
+            for s, rec in todo:
+                windows[s] = rec.buf[:window]
+                rec.buf = rec.buf[window:]   # the state carries the
+                #                              overlap; later hops feed
+                #                              fresh samples only
+                keys[s] = np.asarray(
+                    jax.random.fold_in(self._base_key, rec.uid))
+            bundle = self._bundle(self._mult)
+            mask = np.zeros((self.slots,), bool)
+            for s, _ in todo:
+                mask[s] = True
+            mask_j = jnp.asarray(mask)
+            t0 = time.perf_counter()
+            if self._cust_on:
+                logits, self._state = bundle["init_cust"](
+                    self._state, jnp.asarray(windows), jnp.asarray(keys),
+                    mask_j, *self._slot_custom_args())
+            else:
+                logits, self._state = bundle["init"](
+                    self._state, jnp.asarray(windows), jnp.asarray(keys),
+                    mask_j)
+            logits.block_until_ready()
+            dt = time.perf_counter() - t0
+            self._hop_wall_s += dt
+            self._init_calls += 1
+            for s, rec in todo:
+                _book(rec, s, windows[s], dt / len(todo))
+                init_logits[s] = np.asarray(logits[s])
+            return init_mask, init_logits
+
+        for s, rec in todo:
             first = rec.buf[:window]
-            rec.buf = rec.buf[window:]   # the state carries the overlap;
-                                         # later hops feed fresh samples only
+            rec.buf = rec.buf[window:]
             key = jax.random.fold_in(self._base_key, rec.uid)[None]
             t0 = time.perf_counter()
             if self._cust_on and rec.custom is not None:
@@ -775,21 +867,12 @@ class StreamServer:
             else:
                 logits, one = self.engine.init(jnp.asarray(first[None]), key)
             self._state = self._scatter(self._state, one, s)
-            self._dstate = dec.reset_slot(self._dstate, s)
-            if self._vstate is not None:
-                self._vstate = vd.vad_reset_slot(self._vstate, s)
             dt = time.perf_counter() - t0
-            rec.wall_s += dt
             # the window-0 decision counts toward throughput, so its time
             # must count too (decisions_per_sec = decisions / hop_wall_s)
             self._hop_wall_s += dt
-            rec.initialized = True
-            rec.hops += 1
-            rec.consumed += window
-            rec.recent = first.copy()
-            rec.pending = []
-            rec.silent_run = 0
-            init_mask[s] = True
+            self._init_calls += 1
+            _book(rec, s, first, dt)
             init_logits[s] = np.asarray(logits[0])
         return init_mask, init_logits
 
@@ -878,6 +961,7 @@ class StreamServer:
             else:
                 fn = self._replay_fn(bundle, n, cust=False)
                 lg, self._state = fn(self._state, jnp.asarray(a), mask_j)
+            self._replay_calls += 1
             outs = []
             for j in range(n):
                 self._dstate, out = self._decide(self._dstate, lg[:, j],
@@ -916,6 +1000,7 @@ class StreamServer:
             hop_logits.block_until_ready()
             dt = time.perf_counter() - t0
             self._hop_wall_s += dt
+            self._hop_calls += 1
             n_active = int(compute_mask.sum())
             for s, rec in enumerate(self._slots):
                 if compute_mask[s]:
@@ -942,6 +1027,7 @@ class StreamServer:
                                              jnp.asarray(fill_mask))
             jax.block_until_ready(self._state)
             self._hop_wall_s += time.perf_counter() - t0
+            self._gate_calls += 1
 
         internal = np.asarray([rec is not None and rec.internal
                                for rec in self._slots])
@@ -1036,6 +1122,15 @@ class StreamServer:
             "speech_hops": self._speech_hops,
             "gated_hops": self._gated_hops,
             "learn_hops": self._learn_hops,
+            # each entry is one batched jax call; init/hop/replay calls
+            # cost one fused-kernel launch per IMC layer (any number of
+            # slots per call), gate calls launch nothing
+            "batched_calls": {
+                "init": self._init_calls,
+                "hop": self._hop_calls,
+                "replay": self._replay_calls,
+                "gate": self._gate_calls,
+            },
             "duty_cycle": round(duty, 4) if duty is not None else None,
             "hop_wall_s": round(self._hop_wall_s, 4),
             "decisions_per_sec": round(

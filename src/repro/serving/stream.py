@@ -64,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantize import ACT_Q
+from repro.core.sa_noise import sa_noise_columns
 from repro.models import kws
 
 # ---------------------------------------------------------------------------
@@ -160,20 +161,11 @@ def make_stream_geometry(cfg: kws.KWSConfig, hop: int) -> StreamGeometry:
 
 
 # ---------------------------------------------------------------------------
-# Per-absolute-column SA-noise field
+# Per-absolute-column SA-noise field (primitives live in repro.core.sa_noise
+# — the hardware-model layer — so the offline oracle side can evaluate the
+# same field without importing serving; this module keeps the hop-geometry
+# views of it)
 # ---------------------------------------------------------------------------
-
-
-def sa_noise_columns(key: jax.Array, layer: int, cols: jax.Array,
-                     c_out: int, std: float) -> jax.Array:
-    """Noise-field values for one stream: (n_cols,) absolute conv column
-    indices -> (n_cols, c_out).  Column ``a`` of layer ``l`` always yields
-    the same realization for the same stream key — the SA evaluates each
-    column once, and its noise sample is a property of that evaluation."""
-    base = jax.random.fold_in(key, layer)
-    return std * jax.vmap(
-        lambda a: jax.random.normal(jax.random.fold_in(base, a),
-                                    (c_out,)))(cols)
 
 
 def window_sa_noise(key: jax.Array, cfg: kws.KWSConfig,

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compensation, imc
+from repro.core.sa_noise import SANoiseField
 from repro.models import kws
 from repro.optim import adam, cosine_schedule
 
@@ -144,39 +145,80 @@ def evaluate(params, state, x: np.ndarray, y: np.ndarray,
     return correct / len(y)
 
 
+def _hw_batched(hw, x, cfg, out_index: int, *, chip_offsets, sa_noise_std,
+                seed, batch, use_kernel, sa_noise_field):
+    """Shared chunked hardware forward of evaluate_hw / hw_features.
+
+    SA noise comes either from fresh per-chunk rng draws
+    (``sa_noise_std``/``seed`` — the fleet-statistics mode) or from an
+    explicit ``SANoiseField`` whose row n is example n's (stream key,
+    window index) — the offline-oracle mode that reproduces a live
+    stream's (or an enrollment session's) noise realizations bit-exactly.
+    The field's rows ride along with their batch slice."""
+    if sa_noise_field is not None:
+        if sa_noise_std > 0.0:
+            raise ValueError("pass either sa_noise_std or sa_noise_field, "
+                             "not both")
+        if sa_noise_field.keys.shape[0] != len(x):
+            raise ValueError(
+                f"sa_noise_field has {sa_noise_field.keys.shape[0]} rows "
+                f"for {len(x)} examples")
+        std, hop = float(sa_noise_field.std), int(sa_noise_field.hop)
+        fwd = jax.jit(lambda xb, ks, hs: kws.hw_forward(
+            hw, xb, cfg, chip_offsets=chip_offsets,
+            sa_noise_field=SANoiseField(keys=ks, hops=hs, std=std, hop=hop),
+            use_kernel=use_kernel)[out_index])
+        outs = []
+        for i in range(0, len(x), batch):
+            outs.append(np.asarray(fwd(
+                jnp.asarray(x[i:i + batch]),
+                sa_noise_field.keys[i:i + batch],
+                sa_noise_field.hops[i:i + batch])))
+        return np.concatenate(outs, axis=0)
+    fwd = jax.jit(lambda xb, k: kws.hw_forward(
+        hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
+        rng=k, use_kernel=use_kernel)[out_index])
+    outs, key = [], jax.random.PRNGKey(seed)
+    for i in range(0, len(x), batch):
+        key, sub = jax.random.split(key)
+        outs.append(np.asarray(fwd(jnp.asarray(x[i:i + batch]), sub)))
+    return np.concatenate(outs, axis=0)
+
+
 def evaluate_hw(hw, x: np.ndarray, y: np.ndarray,
                 cfg: kws.KWSConfig = kws.PAPER_KWS,
                 chip_offsets=None, sa_noise_std: float = 0.0,
                 seed: int = 0, batch: int = 200,
-                use_kernel: bool = False) -> float:
-    """Hardware-path accuracy; ``hw`` is HWParams or PackedHWParams."""
-    fwd = jax.jit(lambda xb, k: kws.hw_forward(
-        hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
-        rng=k, use_kernel=use_kernel)[0])
-    correct, key = 0, jax.random.PRNGKey(seed)
-    for i in range(0, len(y), batch):
-        key, sub = jax.random.split(key)
-        logits = fwd(jnp.asarray(x[i:i + batch]), sub)
-        correct += int(jnp.sum(jnp.argmax(logits, -1)
-                               == jnp.asarray(y[i:i + batch])))
-    return correct / len(y)
+                use_kernel: bool = False,
+                sa_noise_field: Optional[SANoiseField] = None) -> float:
+    """Hardware-path accuracy; ``hw`` is HWParams or PackedHWParams.
+    ``sa_noise_field`` evaluates the per-absolute-column SA-noise field
+    instead of fresh draws (see ``hw_features``)."""
+    logits = _hw_batched(hw, x, cfg, 0, chip_offsets=chip_offsets,
+                         sa_noise_std=sa_noise_std, seed=seed, batch=batch,
+                         use_kernel=use_kernel,
+                         sa_noise_field=sa_noise_field)
+    return float(np.mean(np.argmax(logits, -1) == np.asarray(y)))
 
 
 def hw_features(hw, x: np.ndarray,
                 cfg: kws.KWSConfig = kws.PAPER_KWS,
                 chip_offsets=None, sa_noise_std: float = 0.0,
                 seed: int = 0, batch: int = 200,
-                use_kernel: bool = False) -> np.ndarray:
+                use_kernel: bool = False,
+                sa_noise_field: Optional[SANoiseField] = None) -> np.ndarray:
     """GAP features through the hardware path — the customization feature
-    buffer (§V-C stores these in SRAM for reuse across epochs)."""
-    fwd = jax.jit(lambda xb, k: kws.hw_forward(
-        hw, xb, cfg, chip_offsets=chip_offsets, sa_noise_std=sa_noise_std,
-        rng=k, use_kernel=use_kernel)[1])
-    outs, key = [], jax.random.PRNGKey(seed)
-    for i in range(0, len(x), batch):
-        key, sub = jax.random.split(key)
-        outs.append(np.asarray(fwd(jnp.asarray(x[i:i + batch]), sub)))
-    return np.concatenate(outs, axis=0)
+    buffer (§V-C stores these in SRAM for reuse across epochs).
+
+    With ``sa_noise_field`` (repro.core.sa_noise.SANoiseField) the forward
+    evaluates each example's per-absolute-column SA-noise field at its
+    recorded (stream key, window index) instead of drawing fresh noise —
+    the offline oracle of an enrollment session's feature captures
+    (``CustomizationSession.feature_noise_field()``), bit-identical to
+    what the streaming path computed."""
+    return _hw_batched(hw, x, cfg, 1, chip_offsets=chip_offsets,
+                       sa_noise_std=sa_noise_std, seed=seed, batch=batch,
+                       use_kernel=use_kernel, sa_noise_field=sa_noise_field)
 
 
 def calibration_ideal_counts(hw, xcal: np.ndarray,
@@ -233,7 +275,8 @@ def calibrate_and_compensate(hw, xcal: np.ndarray,
                              cfg: kws.KWSConfig = kws.PAPER_KWS,
                              macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
                              sa_noise_std: float = 1.0,
-                             seed: int = 0):
+                             seed: int = 0,
+                             sa_noise_field: Optional[SANoiseField] = None):
     """Paper §IV-B: estimate per-channel MAV offsets via the chip's TEST
     MODE (Fig 8) and fold the compensation into the in-memory BN biases.
 
@@ -250,7 +293,22 @@ def calibrate_and_compensate(hw, xcal: np.ndarray,
     serving enrollment sessions run the same pieces one-layer-per-tick and
     land on the same biases.  Accepts HWParams or PackedHWParams and
     returns the same kind (the compensated biases are re-packed —
-    reprogramming the bias word lines)."""
+    reprogramming the bias word lines).
+
+    ``sa_noise_field`` lets the offline customization oracle thread one
+    per-absolute-column noise-field spec through the whole pipeline
+    (calibrate -> ``hw_features(sa_noise_field=...)`` -> fine-tune).  It
+    does NOT perturb the calibration itself: the test mode digitizes the
+    macros' *pre-SA* counts, so the inference-time SA field cannot reach
+    the measurement — only the fresh per-read measurement noise
+    (``sa_noise_std``/``seed``, identical in the session path) does.  The
+    field's batch is validated against ``xcal`` so a mismatched oracle
+    spec fails here instead of at the feature re-extraction."""
+    if sa_noise_field is not None \
+            and sa_noise_field.keys.shape[0] != len(xcal):
+        raise ValueError(
+            f"sa_noise_field has {sa_noise_field.keys.shape[0]} rows for "
+            f"{len(xcal)} calibration utterances")
     hw, was_packed = kws.as_hw_params(hw)
     ideal_log = calibration_ideal_counts(hw, xcal, cfg)
     keys = calibration_layer_keys(cfg, seed)

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.profiles import ProfileStore
 from repro.launch.train import train_loop
 
 
@@ -45,6 +46,53 @@ def test_no_partial_checkpoint_on_failure(tmp_path):
     os.makedirs(os.path.join(str(tmp_path), "step_00000099"))
     # missing meta.json -> not listed
     assert ck.all_steps() == []
+
+
+def test_profile_store_roundtrip_and_hygiene(tmp_path):
+    """Customization profiles: lossless array round trip, overwrite,
+    listing, deletion, id validation, and partial dirs never listed.
+    (The serving-level restart bit-equality lives in
+    tests/test_customize.py.)"""
+    from repro.serving.customize import CustomizationResult
+
+    rng = np.random.default_rng(0)
+    res = CustomizationResult(
+        bias={"conv1": rng.integers(-64, 65, 96).astype(np.float32),
+              "conv2": rng.integers(-64, 65, 192).astype(np.float32)},
+        fc_w=(rng.integers(-128, 128, (576, 10)) / 128.0
+              ).astype(np.float32),
+        fc_b=np.zeros(10, np.float32), epochs=120, n_utterances=10,
+        history=[{"epoch": 120, "train_accuracy": 1.0}],
+        energy={"uj_per_finetune_step": 48.0})
+    store = ProfileStore(str(tmp_path))
+    assert store.list() == [] and store.latest() is None
+    store.save("alice", res)
+    got = store.load("alice")
+    for k in res.bias:
+        np.testing.assert_array_equal(got.bias[k], res.bias[k])
+    np.testing.assert_array_equal(got.fc_w, res.fc_w)
+    np.testing.assert_array_equal(got.fc_b, res.fc_b)
+    assert (got.epochs, got.n_utterances) == (120, 10)
+    assert got.history == res.history and got.energy == res.energy
+    store.save("alice", res)                      # overwrite is atomic
+    store.save("bob-2", res)
+    assert store.list() == ["alice", "bob-2"]
+    # latest follows the monotonic save counter, not mtime (coarse-mtime
+    # filesystems give back-to-back saves identical timestamps)
+    assert store.latest() == "bob-2"
+    # crash leftovers / foreign entries never count as profiles: a stray
+    # tmp file from an interrupted save and a non-profile directory
+    with open(os.path.join(str(tmp_path), ".tmp.profile.xyz.npz"),
+              "wb") as f:
+        f.write(b"partial")
+    os.makedirs(os.path.join(str(tmp_path), "broken"))
+    assert store.list() == ["alice", "bob-2"]
+    assert store.delete("alice") and not store.exists("alice")
+    assert not store.delete("alice")
+    with pytest.raises(ValueError):
+        store.save("../escape", res)
+    with pytest.raises(FileNotFoundError):
+        store.load("nobody")
 
 
 @pytest.mark.slow

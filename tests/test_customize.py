@@ -4,17 +4,26 @@
   the offline loop's result on the same recorded utterances — same
   compensated biases (calibrate_and_compensate) and same fine-tuned head
   (hw_features -> quantized_head_finetune), bit for bit, chip offsets
-  included (SA-noise-free configurations — the contract's scope);
+  AND SA-noise configurations included: under a noise field the offline
+  oracle evaluates the session's recorded per-absolute-column field
+  (``session.feature_noise_field()`` ->
+  ``hw_features(sa_noise_field=...)``) instead of drawing fresh noise;
 * a mixed inference+learning scheduler tick (live stream hops + session
   replay hops in the same batch) still issues exactly ONE fused-kernel
-  launch per IMC layer;
+  launch per IMC layer — including with N concurrent sessions, whose
+  per-tick launch count never scales with N;
+* a session's wave of feature-replay streams initializes in ONE batched
+  ``stream_init`` launch (``batch_init``), bit-identical to one-at-a-time
+  B=1 admissions;
 * the batched ``sga_update`` kernel (per-row learning rates) is
   bit-identical to the jnp optimizer path;
 * ``finetune_epochs`` chunked across ticks equals the monolithic
   ``quantized_head_finetune``;
 * a hot-swapped / ``install_custom``-ed profile serves bit-identically to
-  a dedicated server on the refolded PackedHWParams, and enabling
-  customization never perturbs other streams' decisions;
+  a dedicated server on the refolded PackedHWParams — including a profile
+  persisted through ``repro.checkpoint.profiles.ProfileStore`` across a
+  server restart — and enabling customization never perturbs other
+  streams' decisions;
 * the wake replay advances its whole deferred run in ONE multi-hop
   launch, bit-identical to sequential single-hop replays.
 """
@@ -25,6 +34,7 @@ import numpy as np
 import pytest
 from jax.experimental import pallas as pl
 
+from repro.checkpoint.profiles import ProfileStore
 from repro.core import imc
 from repro.core.onchip_training import (OnChipTrainConfig, apply_update,
                                         epoch_grads, finetune_epochs,
@@ -137,6 +147,86 @@ def test_session_matches_offline_loop(folded):
 
 
 @pytest.mark.streaming
+def test_session_matches_offline_loop_with_sa_noise(folded):
+    """The noise-field-aware oracle: with SA noise enabled on the server,
+    the session's captured features follow each stream's per-absolute-
+    column field — and the offline loop, fed the session's recorded field
+    (``feature_noise_field`` -> ``hw_features(sa_noise_field=...)``),
+    lands on the SAME compensated biases and fine-tuned head bit for bit.
+    This closes the former SA-noise-free scope of the contract."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                       chip_offsets=offs, sa_noise_std=1.1)
+    rng = np.random.default_rng(21)
+    live = rng.uniform(-1, 1, L + 60 * HOP).astype(np.float32)
+    srv.submit("live", live[:L])
+
+    utts, labels = _utterances(4, seed=22)
+    sess = srv.customize("user", CustomizeConfig(
+        train=TRAIN, epochs_per_tick=7, layers_per_tick=2))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess, live=live[L:])
+    assert sess.phase == "swapped"
+    res = sess.result
+    recorded = np.stack(sess.windows)
+
+    field = sess.feature_noise_field()
+    assert field is not None and field.std == 1.1
+    hw_c = tr.calibrate_and_compensate(hw, recorded, offs, CFG,
+                                       sa_noise_std=1.0, seed=0,
+                                       sa_noise_field=field)
+    hw_cp, _ = m.as_hw_params(hw_c)
+    for name in CFG.imc_layer_names():
+        np.testing.assert_array_equal(res.bias[name],
+                                      np.asarray(hw_cp.bias[name]),
+                                      err_msg=name)
+    feats = tr.hw_features(hw_c, recorded, CFG, chip_offsets=offs,
+                           sa_noise_field=field)
+    w_ref, b_ref = quantized_head_finetune(
+        jnp.asarray(feats), jnp.asarray(labels), hw_cp.fc_w, hw_cp.fc_b,
+        TRAIN)
+    np.testing.assert_array_equal(res.fc_w, np.asarray(w_ref))
+    np.testing.assert_array_equal(res.fc_b, np.asarray(b_ref))
+    # the field is load-bearing: a noise-free oracle sees different
+    # features (so the old fresh-noise oracle could not match)
+    feats0 = tr.hw_features(hw_c, recorded, CFG, chip_offsets=offs)
+    assert not np.array_equal(feats, feats0)
+
+
+@pytest.mark.streaming
+def test_enrollment_capture_noise_oracle_without_compensation(folded):
+    """compensate=False under SA noise: the head trains directly on the
+    enrollment captures — live-stream field values at each utterance's
+    completion window (hop indices > 1, unlike the replay captures) —
+    and the offline oracle reproduces them through the same field."""
+    hw = folded
+    hwp, _ = m.as_hw_params(hw)
+    srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                       sa_noise_std=0.8)
+    utts, labels = _utterances(3, seed=23)
+    sess = srv.customize("user", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=7), compensate=False))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess)
+    field = sess.feature_noise_field()
+    hops = [int(h) for h in np.asarray(field.hops)]
+    # enrollment captures sit at distinct live-stream window indices
+    assert len(set(hops)) == len(hops) and max(hops) > 1
+    feats = tr.hw_features(hw, np.stack(sess.windows), CFG,
+                           sa_noise_field=field)
+    w_ref, b_ref = quantized_head_finetune(
+        jnp.asarray(feats), jnp.asarray(labels), hwp.fc_w, hwp.fc_b,
+        OnChipTrainConfig(epochs=7))
+    np.testing.assert_array_equal(sess.result.fc_w, np.asarray(w_ref))
+    np.testing.assert_array_equal(sess.result.fc_b, np.asarray(b_ref))
+
+
+@pytest.mark.streaming
 def test_customization_does_not_disturb_other_streams(folded):
     """The live stream's decision sequence on a server running a full
     enrollment session is bit-identical to a plain server's — learning
@@ -170,6 +260,159 @@ def test_customization_does_not_disturb_other_streams(folded):
     assert sess.done
     ev_live = [e for e in events if e["stream"] == "live"]
     assert ev_live == ev_plain
+
+
+# ---------------------------------------------------------------------------
+# Batched replay admission: one stream_init launch per wave
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_batched_replay_init_bitexact_vs_sequential(folded):
+    """batch_init=True (whole admission/replay wave in one masked
+    stream_init) produces bit-identical session results AND live decision
+    sequences to the sequential B=1 admission path — under SA noise and
+    chip offsets — while issuing strictly fewer batched init calls."""
+    hw = folded
+    offs = _chip()
+
+    def run(batch_init):
+        srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                           chip_offsets=offs, sa_noise_std=0.9,
+                           batch_init=batch_init)
+        rng = np.random.default_rng(24)
+        live = rng.uniform(-1, 1, L + 40 * HOP).astype(np.float32)
+        srv.submit("live", live[:L])
+        utts, labels = _utterances(3, seed=25)
+        sess = srv.customize("user", CustomizeConfig(
+            train=OnChipTrainConfig(epochs=9), epochs_per_tick=5))
+        for lab, u in zip(labels, utts):
+            sess.enroll(lab, u)
+        sess.finish_enrollment()
+        pos, events = L, []
+        for _ in range(300):
+            if pos < len(live):
+                srv.submit("live", live[pos:pos + HOP])
+                pos += HOP
+            events.extend(srv.step())
+            if sess.done:
+                break
+        assert sess.done, sess.phase
+        return (sess.result, [e for e in events if e["stream"] == "live"],
+                srv.stats()["batched_calls"])
+
+    res_b, ev_b, calls_b = run(True)
+    res_s, ev_s, calls_s = run(False)
+    for name in CFG.imc_layer_names():
+        np.testing.assert_array_equal(res_b.bias[name], res_s.bias[name],
+                                      err_msg=name)
+    np.testing.assert_array_equal(res_b.fc_w, res_s.fc_w)
+    np.testing.assert_array_equal(res_b.fc_b, res_s.fc_b)
+    assert ev_b == ev_s
+    # live + enrollment + a 3-replay wave: 5 sequential inits collapse to
+    # 3 batched calls (the wave is one)
+    assert calls_b["init"] < calls_s["init"]
+
+
+@pytest.mark.streaming
+def test_replay_wave_inits_in_one_launch(folded, monkeypatch):
+    """The tick that initializes a session's whole wave of feature-replay
+    streams traces exactly one pallas_call per IMC layer — one batched
+    stream_init for the wave, not one per replay stream."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=5, use_kernel=True,
+                       chip_offsets=offs)
+    utts, labels = _utterances(3, seed=26)
+    sess = srv.customize("user", CustomizeConfig(train=TRAIN))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+
+    def replay_init_pending():
+        # replay slots admitted last tick, first window buffered, not
+        # yet initialized -> this tick's _admit_ready runs the wave
+        n = sum(1 for rec in srv._slots
+                if rec is not None and rec.internal and not rec.initialized
+                and len(rec.buf) >= L)
+        return n >= 3
+
+    for _ in range(400):
+        if replay_init_pending():
+            break
+        srv.step()
+    assert replay_init_pending(), "never reached a replay init wave"
+
+    jax.clear_caches()
+    calls = []
+    real = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("grid"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    srv.step()
+    assert len(calls) == CFG.num_conv_layers - 1, calls
+
+
+# ---------------------------------------------------------------------------
+# Persistent profiles: save -> restart -> install_custom, bit-identical
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.streaming
+def test_profile_store_restart_roundtrip(folded, tmp_path):
+    """A profile persisted with ProfileStore and restored into a FRESH
+    server (a restart: nothing shared but the folded base model) serves
+    bit-identically to both a pre-restart install and a dedicated server
+    on the refolded PackedHWParams."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                       chip_offsets=offs)
+    utts, labels = _utterances(4, seed=27)
+    sess = srv.customize("user", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=9), epochs_per_tick=5))
+    for lab, u in zip(labels, utts):
+        sess.enroll(lab, u)
+    sess.finish_enrollment()
+    _drive(srv, sess)
+    res = sess.result
+    refolded = sess.refolded()
+
+    store = ProfileStore(str(tmp_path))
+    store.save("user", res)
+    assert store.list() == ["user"]
+    loaded = store.load("user")
+    for name in CFG.imc_layer_names():
+        np.testing.assert_array_equal(loaded.bias[name], res.bias[name],
+                                      err_msg=name)
+    np.testing.assert_array_equal(loaded.fc_w, res.fc_w)
+    np.testing.assert_array_equal(loaded.fc_b, res.fc_b)
+    assert loaded.epochs == res.epochs
+    assert loaded.n_utterances == res.n_utterances
+
+    rng = np.random.default_rng(28)
+    wav = rng.uniform(-1, 1, L + 6 * HOP).astype(np.float32)
+
+    def serve(install):
+        s2 = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=True,
+                          chip_offsets=offs, seed=29)
+        s2.install_custom("u", install)
+        s2.submit("u", wav)
+        s2.finish("u")
+        return s2.drain()
+
+    ev_pre = serve(res)                      # pre-restart profile object
+    ev_post = serve(loaded)                  # restored from disk
+    assert ev_pre == ev_post
+
+    srv_ref = StreamServer(refolded, CFG, hop=HOP, slots=2,
+                           use_kernel=True, chip_offsets=offs, seed=29)
+    srv_ref.submit("u", wav)
+    srv_ref.finish("u")
+    assert ev_post == srv_ref.drain()
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +467,95 @@ def test_mixed_tick_one_fused_launch_per_layer(folded, monkeypatch):
     monkeypatch.setattr(pl, "pallas_call", counting)
     srv.step()
     assert len(calls) == CFG.num_conv_layers - 1, calls
+
+
+@pytest.mark.streaming
+def test_concurrent_sessions_one_launch_and_offline_equal(folded,
+                                                          monkeypatch):
+    """N concurrent enrollment sessions on ONE server: a tick where BOTH
+    sessions' replay hops ride the batch with a live inference hop still
+    traces exactly one pallas_call per IMC layer (launches never scale
+    with N), and each session's final result equals its own offline
+    oracle on its own recorded utterances."""
+    hw = folded
+    offs = _chip()
+    srv = StreamServer(hw, CFG, hop=HOP, slots=8, use_kernel=True,
+                       chip_offsets=offs)
+    rng = np.random.default_rng(30)
+    live = rng.uniform(-1, 1, L + 400 * HOP).astype(np.float32)
+    srv.submit("live", live[:L])
+    pos = L
+
+    tcfg = OnChipTrainConfig(epochs=9)
+    sessions, per_sess = [], []
+    for k in range(2):
+        utts, labels = _utterances(2, seed=31 + k)
+        # use_kernel=False keeps the SGA optimizer transition on the jnp
+        # path (bit-identical — test-enforced above) so the traced tick
+        # counts only the fused IMC launches
+        s = srv.customize(f"user{k}", CustomizeConfig(
+            train=tcfg, epochs_per_tick=5, layers_per_tick=2,
+            use_kernel=False))
+        for lab, u in zip(labels, utts):
+            s.enroll(lab, u)
+        s.finish_enrollment()
+        sessions.append(s)
+        per_sess.append((utts, labels))
+
+    def replay_hops_ready():
+        owners = set()
+        for rec in srv._slots:
+            if (rec is not None and rec.internal and rec.initialized
+                    and len(rec.buf) >= HOP):
+                # replay ids are "~cust{sid}u{j}" — strip the utterance
+                owners.add(rec.stream_id[:rec.stream_id.rindex("u")])
+        return len(owners) >= 2
+
+    traced = False
+    for _ in range(600):
+        if not traced and replay_hops_ready():
+            # both sessions' replay hops + the live hop in one batch
+            srv.submit("live", live[pos:pos + HOP])
+            pos += HOP
+            jax.clear_caches()
+            calls = []
+            real = pl.pallas_call
+
+            def counting(*args, **kwargs):
+                calls.append(kwargs.get("grid"))
+                return real(*args, **kwargs)
+
+            monkeypatch.setattr(pl, "pallas_call", counting)
+            srv.step()
+            monkeypatch.setattr(pl, "pallas_call", real)
+            assert len(calls) == CFG.num_conv_layers - 1, calls
+            traced = True
+            continue
+        if pos < len(live):
+            srv.submit("live", live[pos:pos + HOP])
+            pos += HOP
+        srv.step()
+        if all(s.done for s in sessions):
+            break
+    assert traced, "never hit a tick with both sessions' replay hops"
+    assert all(s.done for s in sessions), [s.phase for s in sessions]
+
+    for s, (utts, labels) in zip(sessions, per_sess):
+        recorded = np.stack(s.windows)
+        np.testing.assert_array_equal(recorded, np.stack(utts))
+        hw_c = tr.calibrate_and_compensate(hw, recorded, offs, CFG,
+                                           sa_noise_std=1.0, seed=0)
+        hw_cp, _ = m.as_hw_params(hw_c)
+        for name in CFG.imc_layer_names():
+            np.testing.assert_array_equal(s.result.bias[name],
+                                          np.asarray(hw_cp.bias[name]),
+                                          err_msg=name)
+        feats = tr.hw_features(hw_c, recorded, CFG, chip_offsets=offs)
+        w_ref, b_ref = quantized_head_finetune(
+            jnp.asarray(feats), jnp.asarray(labels), hw_cp.fc_w,
+            hw_cp.fc_b, tcfg)
+        np.testing.assert_array_equal(s.result.fc_w, np.asarray(w_ref))
+        np.testing.assert_array_equal(s.result.fc_b, np.asarray(b_ref))
 
 
 # ---------------------------------------------------------------------------

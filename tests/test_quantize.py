@@ -61,6 +61,41 @@ def test_fixed_hardware_scale():
     assert float(scale) == 1.375
 
 
+def test_error_scale_exponent_floor_keeps_headroom():
+    """mode='floor': 2**s * max|err| lands in (1/2, 1] — the dominant
+    error stays on-grid instead of saturating AT/ABOVE the rail the way
+    the ceil form does by construction (the Q1.7-rail learning stall)."""
+    err = jnp.asarray([0.001, -0.003, 0.002])
+    s_c = int(error_scale_exponent(err))
+    s_f = int(error_scale_exponent(err, mode="floor"))
+    assert s_f == s_c - 1 == int(np.floor(np.log2(1.0 / 0.003)))
+    m = float(jnp.max(jnp.abs(err)))
+    assert m * 2.0 ** s_c >= 1.0          # ceil: at/above the rail
+    assert 0.5 < m * 2.0 ** s_f <= 1.0    # floor: one bit of headroom
+    # power-of-two max touches exactly 1.0 (the only rail contact)
+    err2 = jnp.asarray([0.25, -0.125])
+    s2 = int(error_scale_exponent(err2, mode="floor"))
+    assert float(jnp.max(jnp.abs(err2))) * 2.0 ** s2 == 1.0
+    # scale_error threads the mode through
+    scaled, scale = scale_error(err, mode="floor")
+    assert float(scale) == 2.0 ** s_f
+    assert float(jnp.sum(jnp.abs(scaled))) > 0.0   # still rescues sub-LSB
+
+
+def test_error_scale_exponent_clamped():
+    err = jnp.asarray([1e-6, -2e-6])
+    assert int(error_scale_exponent(err)) > 12
+    assert int(error_scale_exponent(err, max_exponent=8)) == 8
+    assert int(error_scale_exponent(err, mode="floor", max_exponent=8)) == 8
+    # no-op clamp + zero-error identity preserved
+    big = jnp.asarray([0.4])
+    assert int(error_scale_exponent(big, max_exponent=8)) \
+        == int(error_scale_exponent(big))
+    assert int(error_scale_exponent(jnp.zeros(4), max_exponent=8)) == 0
+    with pytest.raises(ValueError):
+        error_scale_exponent(err, mode="round")
+
+
 def test_paper_formats():
     assert WEIGHT_Q.total_bits == 8 and WEIGHT_Q.scale == 1 / 128
     assert ACT_Q.total_bits == 8 and ACT_Q.scale == 1 / 16

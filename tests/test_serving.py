@@ -219,6 +219,50 @@ def test_packed_hw_params_no_repacking(folded, monkeypatch):
 # ---------------------------------------------------------------------------
 
 
+def test_batched_admission_one_launch_and_bitexact(folded, monkeypatch):
+    """A wave of 4 simultaneous admissions initializes in ONE masked
+    batched stream_init — exactly one pallas_call per IMC layer for the
+    whole wave — and the decision sequences are bit-identical to the
+    sequential (batch_init=False) B=1 admission path, SA noise and chip
+    offsets included."""
+    hw = folded
+    offs = _chip()
+    rng = np.random.default_rng(17)
+    wavs = {f"s{i}": rng.uniform(-1, 1, L + 3 * HOP).astype(np.float32)
+            for i in range(4)}
+
+    def run(batch_init, count_first_step=False):
+        srv = StreamServer(hw, CFG, hop=HOP, slots=4, use_kernel=True,
+                           chip_offsets=offs, sa_noise_std=0.7,
+                           batch_init=batch_init, seed=5)
+        for sid, wav in wavs.items():
+            srv.submit(sid, wav)
+            srv.finish(sid)
+        calls = None
+        events = []
+        if count_first_step:
+            jax.clear_caches()
+            calls = []
+            real = pl.pallas_call
+
+            def counting(*args, **kwargs):
+                calls.append(kwargs.get("grid"))
+                return real(*args, **kwargs)
+
+            monkeypatch.setattr(pl, "pallas_call", counting)
+            events.extend(srv.step())       # the 4-stream admission wave
+            monkeypatch.setattr(pl, "pallas_call", real)
+        events.extend(srv.drain())
+        return events, calls, srv.stats()["batched_calls"]["init"]
+
+    ev_b, calls, init_b = run(True, count_first_step=True)
+    assert len(calls) == CFG.num_conv_layers - 1, calls
+    assert init_b == 1                      # one wave, one batched call
+    ev_s, _, init_s = run(False)
+    assert init_s == 4                      # B=1 per admission
+    assert ev_b == ev_s
+
+
 def test_scheduler_one_fused_launch_per_layer(folded, monkeypatch):
     """A batched hop over 4 concurrent streams traces exactly one
     pallas_call per IMC layer — the slot batch shares each launch."""
