@@ -11,6 +11,12 @@
 #   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
 #                            plus the docs check
 #
+# The fault-recovery gate (tests/test_reliability.py) is the acceptance
+# contract of the self-healing serving stack: canaries detect and
+# localize an injected fault, recompensation heals it back to healthy,
+# stuck columns are masked, the one-launch-per-layer invariant holds
+# under fault + canary, and snapshot/restore resumes bit-identically.
+#
 # The `streaming` marker (pytest.ini) tags the serving equivalence tests,
 # the gating/backpressure/dynamic-hop server tests and the long
 # multi-stream soak: the quick pass deselects them wholesale, then re-runs
@@ -44,4 +50,12 @@ python -m pytest -x -q tests/test_serving.py \
 python -m pytest -x -q tests/test_customize.py \
     -k "session_matches_offline_loop or mixed_tick_one_fused_launch \
         or batched_replay_init or profile_store_restart"
+# fault-recovery gate (canary detect -> localize -> recompensate back to
+# healthy; one fused launch per layer under fault + canary; snapshots
+# restore bit-identically) plus the quick soak slice — the long
+# randomized soaks stay out (marked slow)
+python -m pytest -x -q tests/test_reliability.py \
+    -k "canary_detects or drift_fault_heals or one_launch_per_layer \
+        or snapshot_restore_bit_identical"
+python -m pytest -x -q -m "streaming and not slow" tests/test_reliability.py
 python scripts/check_docs.py

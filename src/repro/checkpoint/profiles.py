@@ -147,6 +147,18 @@ class ProfileStore:
     def exists(self, user_id: str) -> bool:
         return os.path.exists(self._path(user_id))
 
+    def mtime(self, user_id: str) -> Optional[int]:
+        """The stored profile's modification time in integer nanoseconds
+        (``st_mtime_ns`` — exact equality is meaningful, unlike the float
+        seconds view), or None if no profile exists.  ``os.replace`` makes
+        every ``save`` a fresh inode with a fresh mtime, so a changed
+        value is a reliable staleness signal for live installs
+        (``StreamServer`` evicts/reinstalls profiles whose mtime moved)."""
+        try:
+            return os.stat(self._path(user_id)).st_mtime_ns
+        except FileNotFoundError:
+            return None
+
     def list(self) -> List[str]:
         """User ids with a stored profile."""
         out = []

@@ -253,6 +253,28 @@ def customization_energy_summary(n_utts: int, feat_dim: int,
     }
 
 
+def recovery_energy_summary(offline_stats: List[dict], *, n_cal: int,
+                            bias_bits: int, freq_hz: float = 1e6) -> dict:
+    """Analytical energy of one self-healing recompensation pass
+    (repro.serving.health): the §IV-B test mode re-runs ``n_cal``
+    calibration windows through the full stack with the counts digitized
+    instead of sign-compressed (charged as full offline decisions — the
+    test mode has no streaming reuse), then re-programs the implicated
+    layers' bias words (``bias_bits`` SRAM writes).  Consumed by the
+    health monitor's accounting and ``benchmarks/run.py --faults``."""
+    rep = kws_chip_report(offline_stats, freq_hz)
+    measure_j = n_cal * rep.energy_j_per_decision
+    reprogram_j = bias_bits * E_SRAM_WR_BIT
+    return {
+        "freq_hz": freq_hz,
+        "n_cal_windows": n_cal,
+        "bias_bits": bias_bits,
+        "measure_uj": measure_j * 1e6,
+        "reprogram_uj": reprogram_j * 1e6,
+        "total_uj": (measure_j + reprogram_j) * 1e6,
+    }
+
+
 def training_energy_j(num_epochs: int, freq_hz: float = 1e6,
                       macs_per_epoch: int = 0, lut_ops: int = 0,
                       div_ops: int = 0, sram_bits: int = 0) -> float:

@@ -21,6 +21,11 @@ layer with dynamic hop widening and admission control.
   customize.py  — on-device customization as a serving workload:
                   enrollment sessions, scheduler-ticked bias compensation
                   + SGA fine-tuning, hot-swapped per-stream profiles
+  health.py     — canary-based health monitoring and self-healing over
+                  the fault models in repro.core.faults: periodic known
+                  windows ride the batched tick, divergence localizes the
+                  faulty layer/columns, background recompensation heals
+                  drift/flip faults, unrecoverable columns are masked
 
 Bit-exactness contracts: N hops of the streaming path equal ``hw_forward``
 on each full window — noise and chip-offset configurations included;
@@ -37,9 +42,11 @@ admissions; and a profile persisted via
 after a restart.
 """
 
+from repro.core.faults import FaultConfig, FaultModel
 from repro.core.sa_noise import SANoiseField
 from repro.serving.customize import (CustomizationResult,
                                      CustomizationSession, CustomizeConfig)
+from repro.serving.health import HealthConfig, HealthMonitor
 from repro.serving.decision import (DecisionConfig, DecisionOut,
                                     DecisionState, decision_init,
                                     decision_step)
@@ -48,21 +55,23 @@ from repro.serving.scheduler import (AdmissionConfig, DynamicHopConfig,
 from repro.serving.stream import (StreamEngine, StreamGeometry, StreamState,
                                   gated_step, gated_window_step,
                                   hop_alignment, hop_sa_noise_fields,
-                                  make_stream_geometry, sa_noise_columns,
-                                  silence_fills, stream_init,
-                                  stream_multi_step, stream_step,
-                                  streaming_layer_stats, window_sa_noise)
+                                  make_stream_geometry, retention_fills,
+                                  sa_noise_columns, silence_fills,
+                                  stream_init, stream_multi_step,
+                                  stream_step, streaming_layer_stats,
+                                  window_sa_noise)
 from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
                                vad_init, vad_step)
 
 __all__ = [
     "AdmissionConfig", "CustomizationResult", "CustomizationSession",
     "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
-    "DynamicHopConfig", "SANoiseField", "StreamServer", "StreamEngine",
+    "DynamicHopConfig", "FaultConfig", "FaultModel", "HealthConfig",
+    "HealthMonitor", "SANoiseField", "StreamServer", "StreamEngine",
     "StreamGeometry", "StreamState", "VADConfig", "VADState", "decision_init",
     "decision_step", "frame_energy_db", "gated_step", "gated_window_step",
     "hop_alignment", "hop_sa_noise_fields", "make_stream_geometry",
-    "sa_noise_columns", "silence_fills", "stream_init", "stream_multi_step",
-    "stream_step", "streaming_layer_stats", "vad_init", "vad_step",
-    "window_sa_noise",
+    "retention_fills", "sa_noise_columns", "silence_fills", "stream_init",
+    "stream_multi_step", "stream_step", "streaming_layer_stats", "vad_init",
+    "vad_step", "window_sa_noise",
 ]

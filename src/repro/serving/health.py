@@ -1,0 +1,653 @@
+"""Canary health monitoring + self-healing recompensation for serving.
+
+A deployed chip fails silently: an SA offset drifting past the decision
+margin produces confidently wrong keywords, not errors.  This module
+closes the loop the paper leaves at enrollment — it *detects* silicon
+faults (repro.core.faults) in production and re-runs the paper's §IV-B
+test-mode bias compensation online to heal them:
+
+* **canary windows** — the monitor owns a small set of known calibration
+  inputs; every ``interval`` ticks it submits one as an *internal stream*
+  (the repro.serving.customize replay pattern: ``[hop zeros, window]``,
+  captured at ``window + hop``), so the canary's init rides the batched
+  admission wave and its hop rides the SAME batched launch as live
+  traffic — health monitoring adds ZERO extra pallas_calls
+  (trace-enforced in tests/test_reliability.py).  The canary stream
+  reuses one reserved uid, so its per-absolute-column SA-noise field is
+  fixed and the expected per-layer outputs are computed once, on the
+  jnp reference path (``use_kernel=False`` — bit-identical to the fused
+  kernel by the repo-wide contract, and zero launches);
+* **per-layer divergence** — the captured ``StreamState`` exposes every
+  IMC layer's output columns (layer i's carry into layer i+1, the GAP
+  ring for the last layer); comparing them channel-wise against the
+  expected state localizes the faulty layer AND the faulty columns,
+  exactly what the recompensation job needs;
+* **health state machine** — ``healthy -> degraded`` on the first failing
+  canary, ``-> quarantined`` after ``quarantine_after`` consecutive
+  failures (detection confirmed; the recovery job launches),
+  ``-> recovering`` once the recompensated biases are hot-swapped in,
+  ``-> healthy`` after ``recover_after`` consecutive clean canaries.
+  While not healthy, every decision event the server emits carries
+  ``degraded: True`` — graceful degradation instead of silent wrong
+  answers;
+* **self-healing** — the recovery job re-runs the paper's test mode as a
+  tick-resumable background job (the repro.serving.customize calibration
+  pattern): one tick of ``calibration_ideal_counts`` (the digitize-the-
+  counts mode — zero IMC launches), then ``layers_per_tick`` layers per
+  tick of ``compensate_layer_bias`` against the enrollment-time baseline,
+  measuring the *current* fault deltas; the resulting integer bias deltas
+  hot-swap in through the scheduler's chip-global rider row (the same
+  pre-sign operand the per-slot customization deltas use).  Drift and
+  trim-bit flips heal to sub-count residuals; stuck rails saturate the
+  ±bias_range clip and cannot heal — channels still divergent after
+  ``stuck_after`` post-heal canaries are **permanently masked** (excluded
+  from future divergence checks; their columns are written off, as the
+  silicon would fuse them out).  A layer that keeps failing only in
+  *aggregate* — no single maskable column — healed as far as integer bias
+  writes can go (a fractional fault leaves a ±0.5-count residual that
+  deterministically flips a subset of SA cells): its best-effort heal is
+  **accepted** and the current fault+heal delta frozen into the expected
+  reference (rebaselining), so later canaries measure NEW faults against
+  the accepted chip instead of re-healing a residual forever.
+
+The monitor requires ``streaming=True`` (divergence reads the carries /
+GAP ring) and a fixed hop (a dynamic-hop retarget would rebuild the
+canary's state mid-capture, like enrollment).  Canaries pause while the
+server has no live traffic — there is nothing to protect and the chip
+sleeps — so ``drain()`` still terminates.
+
+Everything here is snapshot-safe: ``snapshot()``/``restore()`` round-trip
+the state machine, the pending canary, the masked columns and a
+mid-flight recovery job bit-identically (``StreamServer.snapshot``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy
+from repro.models import kws
+from repro.serving import stream as sv
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Canary cadence, divergence thresholds and recovery pacing.
+
+    ``interval``: ticks between canary submissions; ``calib_windows``:
+    calibration inputs for the recompensation measurement (canary
+    comparisons always use window 0, so the expected state is fixed);
+    ``divergence_frac``: fraction of mismatching state cells that fails a
+    layer; ``channel_frac``: per-channel row-mismatch fraction that
+    implicates the channel (a stuck column flips ~half its rows, so keep
+    this below 0.5); ``quarantine_after``/``recover_after``: consecutive
+    failing/clean canaries to confirm a fault / declare recovery;
+    ``stuck_after``: post-heal failing canaries before still-divergent
+    channels are permanently masked; ``layers_per_tick`` bounds the
+    recompensation work per tick; ``recal_sa_noise_std`` is the test-mode
+    measurement noise (paper §IV-B — test mode can average repeated SA
+    reads, so values below 1.0 model an N-read-averaged measurement);
+    ``recal_scope`` picks what a recovery recompensates: ``"prefix"``
+    (default) heals conv1..flagged — minimal latency — while ``"all"``
+    re-runs the full enrollment-time §IV-B pass over every array, which
+    also catches canary-invisible faults in layers the localization
+    never flagged."""
+
+    interval: int = 8
+    calib_windows: int = 2
+    divergence_frac: float = 0.05
+    channel_frac: float = 0.4
+    quarantine_after: int = 2
+    recover_after: int = 2
+    stuck_after: int = 2
+    layers_per_tick: int = 2
+    recal_sa_noise_std: float = 1.0
+    recal_scope: str = "prefix"
+    seed: int = 0
+    auto_recover: bool = True
+
+    def __post_init__(self):
+        if self.interval < 1 or self.calib_windows < 1:
+            raise ValueError("interval and calib_windows must be >= 1")
+        if not (0.0 < self.channel_frac <= 1.0
+                and 0.0 < self.divergence_frac <= 1.0):
+            raise ValueError("divergence_frac and channel_frac must be "
+                             "in (0, 1]")
+        if min(self.quarantine_after, self.recover_after, self.stuck_after,
+               self.layers_per_tick) < 1:
+            raise ValueError("state-machine counts must be >= 1")
+        if self.recal_scope not in ("prefix", "all"):
+            raise ValueError("recal_scope must be 'prefix' or 'all'")
+
+
+class HealthMonitor:
+    """One server's canary scheduler, divergence localizer and recovery
+    driver.  Constructed by ``StreamServer(health=HealthConfig(...))``;
+    the scheduler calls ``on_step`` (captures) and ``tick`` (recovery
+    work + canary spawns) from inside ``step()``."""
+
+    STATES = ("healthy", "degraded", "quarantined", "recovering")
+
+    def __init__(self, srv, hcfg: HealthConfig):
+        if not srv.streaming:
+            raise ValueError("health monitoring requires streaming=True "
+                             "(divergence reads the per-layer carries and "
+                             "the GAP ring)")
+        if srv.hcfg is not None:
+            raise ValueError("health monitoring requires a fixed hop "
+                             "(dynamic_hop retargets would rebuild the "
+                             "canary state mid-capture)")
+        self.hcfg = hcfg
+        self.srv = srv
+        self.state = "healthy"
+        # reserved uid: the canary's SA-noise field key is fixed, so the
+        # expected per-layer outputs are computed once and reused forever
+        self._uid = srv._uid
+        srv._uid += 1
+        window, hop = srv.geom.window, srv.geom.hop
+        self._xcal = np.asarray(jax.random.uniform(
+            jax.random.PRNGKey(hcfg.seed), (hcfg.calib_windows, window),
+            minval=-1.0, maxval=1.0), np.float32)
+        self._wav = np.concatenate([np.zeros((hop,), np.float32),
+                                    self._xcal[0]])
+        self._expected = None            # lazily computed reference state
+        self._pending: Optional[dict] = None
+        self._canary_n = 0
+        self._last_spawn = -(10 ** 9)    # first canary fires immediately
+        self._fail_streak = 0
+        self._ok_streak = 0
+        self._post_heal_fails = 0
+        self.canaries = 0
+        self.failed_canaries = 0
+        self.recoveries = 0
+        self.recovery_energy_uj = 0.0
+        self.detected_tick: Optional[int] = None
+        self.quarantined_tick: Optional[int] = None
+        self.implicated: Dict[str, List[int]] = {}
+        self.divergence: Dict[str, float] = {}
+        self.masked = {name: np.zeros((srv.cfg.channels[int(name[4:])],),
+                                      bool)
+                       for name in srv.cfg.imc_layer_names()}
+        # the accepted reference delta: per-channel fault+heal residuals
+        # FROZEN into the expected canary state when a column is written
+        # off (masked) or a layer's best-effort heal is accepted — later
+        # canaries detect NEW faults relative to this accepted baseline,
+        # while a frozen residual that drifts again re-diverges
+        self._ref_delta = {
+            name: np.zeros((srv.cfg.channels[int(name[4:])],), np.float32)
+            for name in srv.cfg.imc_layer_names()}
+        self.accepted_layers: List[str] = []
+        self._healed: List[str] = []     # layers with >= 1 applied heal
+        self._frozen_layers: List[str] = []  # layers whose FULL delta is
+        #                                      part of the accepted baseline
+        self.history: List[dict] = [{"tick": 0, "state": "healthy"}]
+        self._recovery: Optional[dict] = None
+
+    # -- the expected (clean-chip) canary state ------------------------------
+
+    def _ensure_expected(self) -> None:
+        """Per-layer expected outputs of canary window 0 on the *accepted*
+        chip: the jnp reference path (zero pallas launches), same noise
+        field (the reserved uid's key), same chip offsets — bit-identical
+        to what the live canary's rows compute when no unaccepted fault is
+        active.  Masked (written-off) columns and accepted best-effort
+        heals carry their FROZEN fault+heal delta into the reference
+        (``_ref_delta``), so their divergence — and its downstream
+        propagation — compares clean; anything NOT yet accepted still
+        diverges and is detected."""
+        if self._expected is not None:
+            return
+        srv = self.srv
+        cfg, geom = srv.cfg, srv.geom
+        kw = {k: v for k, v in srv._engine_kw.items() if k != "streaming"}
+        kw["use_kernel"] = False
+        if any(d.any() for d in self._ref_delta.values()):
+            hwp, _ = kws.as_hw_params(srv._hw)
+            kw["bias_delta"] = {
+                name: jnp.asarray(self._ref_delta[name])[None]
+                for name in cfg.imc_layer_names()}
+            kw["head_w"] = hwp.fc_w[None]
+            kw["head_b"] = hwp.fc_b[None]
+        key = jax.random.fold_in(srv._base_key, self._uid)[None]
+        wav = self._wav
+        _, st = sv.stream_init(srv._hw, jnp.asarray(wav[None, :geom.window]),
+                               key, cfg, geom, **kw)
+        _, st = sv.stream_step(srv._hw, st,
+                               jnp.asarray(wav[None, geom.window:]),
+                               cfg, geom, **kw)
+        self._expected = {"carries": [np.asarray(c[0]) for c in st.carries],
+                          "ring": np.asarray(st.ring[0])}
+
+    # -- per-tick hooks (called by StreamServer.step) ------------------------
+
+    def on_step(self, srv) -> None:
+        """Capture the pending canary's per-layer state right after the
+        batched hop (before slots retire), then evaluate divergence."""
+        p = self._pending
+        if p is None:
+            return
+        rec = srv._streams.get(p["stream"])
+        if (rec is None or rec.slot is None or not rec.initialized
+                or rec.consumed < p["target"]):
+            return
+        s = rec.slot
+        carries = [np.asarray(c[s]) for c in srv._state.carries]
+        ring = np.asarray(srv._state.ring[s])
+        srv._drop_internal(p["stream"])
+        self._pending = None
+        self._evaluate(srv, carries, ring)
+
+    def tick(self, srv) -> None:
+        """Recovery work first (a heal mid-tick must not race a pending
+        canary — apply drops it), then canary spawning."""
+        self._recovery_tick(srv)
+        live = any(rec is not None and not rec.internal
+                   for rec in srv._slots) or any(
+            not rec.internal for rec in srv._queue)
+        if (self._pending is None and live
+                and srv._steps - self._last_spawn >= self.hcfg.interval):
+            self._ensure_expected()
+            sid = f"~canary{self._canary_n}"
+            srv._submit_internal(sid, self._wav, uid=self._uid)
+            self._pending = {"stream": sid,
+                             "target": srv.geom.window + srv.geom.hop}
+            self._last_spawn = srv._steps
+            self._canary_n += 1
+            self.canaries += 1
+
+    # -- divergence + state machine ------------------------------------------
+
+    @staticmethod
+    def _unshuffle(a: np.ndarray, groups: int) -> np.ndarray:
+        """Invert the post-MAV channel shuffle (repro.core.binary
+        .channel_shuffle) on the last axis, so divergence is reported in
+        *bias-channel* coordinates — the coordinates faults are injected
+        in and the recompensation writes back to."""
+        if groups <= 1:
+            return a
+        c = a.shape[-1]
+        return (a.reshape(a.shape[:-1] + (c // groups, groups))
+                .swapaxes(-1, -2).reshape(a.shape))
+
+    def _transition(self, srv, state: str) -> None:
+        if state != self.state:
+            self.state = state
+            self.history.append({"tick": srv._steps, "state": state})
+
+    def _evaluate(self, srv, carries: List[np.ndarray],
+                  ring: np.ndarray) -> None:
+        """Compare the captured canary state against the clean expectation
+        layer by layer.  ``carries[m]`` holds layer m's output columns
+        (layer m+1's input carry); the GAP ring holds the last layer's.
+        Masked channels are excluded; a layer fails on any implicated
+        channel or on total mismatch >= divergence_frac."""
+        # the reference may have been invalidated while this canary was in
+        # flight (mask change, heal apply, snapshot restore) — recompute
+        # against the CURRENT masks, which is also the correct semantics
+        self._ensure_expected()
+        cfg = srv.cfg
+        last = cfg.num_conv_layers - 1
+        flagged: Dict[str, List[int]] = {}
+        self.divergence = {}
+        rows: List[tuple] = []
+        for m in range(1, cfg.num_conv_layers):
+            if m < last:
+                obs, ref = carries[m], self._expected["carries"][m]
+            else:
+                obs, ref = ring, self._expected["ring"]
+            if obs.shape[0] == 0:          # zero-width carry: no view
+                continue
+            g = cfg.groups(m)
+            obs, ref = self._unshuffle(obs, g), self._unshuffle(ref, g)
+            mism = obs != ref
+            mism[:, self.masked[f"conv{m}"]] = False
+            frac = mism.mean(axis=0)
+            total = float(mism.mean())
+            self.divergence[f"conv{m}"] = round(total, 4)
+            bad = np.where(frac >= self.hcfg.channel_frac)[0]
+            rows.append((f"conv{m}", total, bad))
+        # alarm on the thresholds, but localize to the EARLIEST layer
+        # with ANY divergence: corruption amplifies as it feeds forward,
+        # so a fault sub-threshold at its own layer (one flipped column
+        # barely moving the tail) routinely crosses the alarm threshold
+        # only downstream — flagging the first super-threshold layer
+        # would heal (and mask!) innocent layers forever while the true
+        # cause stays untouched.  The reference carries the accepted
+        # baseline, so any nonzero mismatch upstream is a real,
+        # unaccepted fault.
+        if any(bad.size or total >= self.hcfg.divergence_frac
+               for _, total, bad in rows):
+            for name, total, bad in rows:
+                if bad.size or total > 0.0:
+                    flagged[name] = [int(c) for c in bad]
+                    break
+        if flagged:
+            self.failed_canaries += 1
+            self._fail_streak += 1
+            self._ok_streak = 0
+            self.implicated = flagged
+            if self.state == "healthy":
+                self.detected_tick = srv._steps
+                self._transition(srv, "degraded")
+            if (self.state == "degraded"
+                    and self._fail_streak >= self.hcfg.quarantine_after):
+                self.quarantined_tick = srv._steps
+                self._transition(srv, "quarantined")
+                if self.hcfg.auto_recover and self._recovery is None:
+                    self._start_recovery(list(flagged))
+            elif self.state == "recovering":
+                self._post_heal_fails += 1
+                # defer the write-off while a recovery job is in flight:
+                # the reference only absorbs the new heal (and any rail
+                # channels the job masked) at apply time, so a canary
+                # landing between measurement and apply sees stale
+                # divergence that is about to clear
+                ripe = {n: c for n, c in flagged.items()
+                        if n in self._healed}
+                if (self._post_heal_fails >= self.hcfg.stuck_after
+                        and ripe and self._recovery is None):
+                    # repeated heals didn't take.  Columns still failing
+                    # on their own (implicated) saturate the bias clip —
+                    # stuck rails: write them off permanently.  A layer
+                    # failing only in aggregate healed as far as integer
+                    # bias writes can go (a fractional fault leaves a
+                    # ±0.5-count residual that flips a fixed subset of SA
+                    # cells): accept the best-effort heal.  Either way,
+                    # REBASELINE: freeze the current fault+heal delta of
+                    # every layer a heal has been APPLIED to (its
+                    # remaining delta is best-effort residual by
+                    # construction) into the expected reference.  Scoping
+                    # the freeze to healed layers matters both ways:
+                    # sub-count residuals on healed upstream layers flip
+                    # cells in columns the tail-only divergence check
+                    # never sees — surfacing as unfixable divergence
+                    # DOWNSTREAM that only a frozen baseline clears —
+                    # while a concurrent never-healed fault keeps
+                    # diverging, so it is flagged and healed next instead
+                    # of silently absorbed.  Later canaries measure NEW
+                    # faults against the accepted chip.  The write-off is
+                    # gated on the layer being in ``_healed``: a flagged
+                    # layer no heal has covered yet (the prefix ladder is
+                    # still climbing toward it) falls through to a
+                    # renewed recovery below instead — masking a channel
+                    # the test mode never tried to fix would write off
+                    # perfectly healable silicon.
+                    chip = srv._chip_delta_j
+                    for name, chans in ripe.items():
+                        if chans:
+                            self.masked[name][np.asarray(chans,
+                                                         np.int64)] = True
+                        elif name not in self.accepted_layers:
+                            self.accepted_layers.append(name)
+                            if name not in self._frozen_layers:
+                                self._frozen_layers.append(name)
+                    for name in self._healed:
+                        if name not in self._frozen_layers:
+                            self._frozen_layers.append(name)
+                    if chip is not None:
+                        for name in self._frozen_layers:
+                            self._ref_delta[name] = np.asarray(
+                                chip[name], np.float32).copy()
+                        for name, m_ in self.masked.items():
+                            if m_.any() and name not in self._frozen_layers:
+                                self._ref_delta[name][m_] = np.asarray(
+                                    chip[name], np.float32)[m_]
+                    self._post_heal_fails = 0
+                    self._expected = None   # the reference now carries
+                    #                         the frozen accepted deltas
+                elif self.hcfg.auto_recover and self._recovery is None:
+                    self._start_recovery(list(flagged))  # renewed drift
+        else:
+            self._fail_streak = 0
+            self._ok_streak += 1
+            self._post_heal_fails = 0
+            if (self.state != "healthy"
+                    and self._ok_streak >= self.hcfg.recover_after
+                    and self._recovery is None):
+                self.implicated = {}
+                self._transition(srv, "healthy")
+
+    # -- self-healing: the paper's test mode as a background job -------------
+
+    def _start_recovery(self, layers: List[str]) -> None:
+        """Recompensate every layer up to and including the flagged one
+        (``recal_scope="prefix"``), or every IMC layer (``"all"``).
+        The canary only observes each layer's TAIL columns, so a fault
+        can be invisible at its own layer (no tail row flips) while its
+        hidden columns corrupt the next layer's inputs — divergence at
+        layer m implicates every layer <= m.  The test-mode measurement
+        is per-layer and direct (it drives calibration patterns through
+        the array itself), so healing the whole prefix fixes any of
+        those culprits; on a genuinely clean layer it re-derives the
+        pristine bias — a no-op.  ``"all"`` extends the same argument to
+        faults the canary cannot see at all (a last-layer fault that
+        flips no observed cell of the calibration windows still gets
+        measured, and cancelled, by the direct test mode)."""
+        if self.hcfg.recal_scope == "all":
+            todo = list(self.masked.keys())
+        else:
+            m = max(int(name[4:]) for name in layers)
+            todo = [f"conv{i}" for i in range(1, m + 1)]
+        self._recovery = {"phase": "ideal", "layers": todo,
+                          "idx": 0, "ideal": None, "keys": None, "bias": {}}
+
+    def _fault_measurement(self, srv, name: str, c: int) -> jnp.ndarray:
+        """What the test mode measures beyond the enrollment baseline:
+        the chip's *current* fault delta on this layer (the physical
+        counts contain it; the recompensation estimates and cancels
+        exactly this)."""
+        if srv._faults is not None:
+            return jnp.asarray(srv._faults.deltas()[name])
+        return jnp.zeros((c,))
+
+    def _recovery_tick(self, srv) -> None:
+        from repro.training import kws as tr
+        job = self._recovery
+        if job is None:
+            return
+        cfg = srv.cfg
+        hwp, _ = kws.as_hw_params(srv._hw)
+        if job["phase"] == "ideal":
+            # the digitize-the-counts reference forward: jnp collect_counts
+            # path, zero IMC launches — one tick, like enrollment
+            job["ideal"] = {k: np.asarray(v) for k, v in
+                            tr.calibration_ideal_counts(
+                                srv._hw, jnp.asarray(self._xcal),
+                                cfg).items()}
+            job["keys"] = {k: np.asarray(v) for k, v in
+                           tr.calibration_layer_keys(
+                               cfg, self.hcfg.seed + 1
+                               + self.recoveries).items()}
+            job["phase"] = "layers"
+            return
+        if job["phase"] == "layers":
+            offs = srv._engine_kw["chip_offsets"] or {}
+            todo = job["layers"][job["idx"]:
+                                 job["idx"] + self.hcfg.layers_per_tick]
+            for name in todo:
+                c = cfg.channels[int(name[4:])]
+                off = offs.get(name)
+                baseline = jnp.asarray(job["ideal"][name])
+                if off is not None:
+                    baseline = baseline + off
+                # measured = baseline + fault + noise; the estimator's mean
+                # over the calibration windows isolates the fault, and the
+                # compensated bias is re-derived from the PRISTINE stored
+                # bias (the chip's golden image), so repeated recoveries
+                # replace — never stack — the heal
+                new_bias, est = tr.compensate_layer_bias(
+                    jnp.asarray(hwp.bias[name]), baseline,
+                    self._fault_measurement(srv, name, c),
+                    jnp.asarray(job["keys"][name]),
+                    self.hcfg.recal_sa_noise_std, return_est=True)
+                job["bias"][name] = np.asarray(new_bias)
+                # the write was asked to cancel `est`; what the clipped
+                # parity grid realized is `new_bias - stored`.  A channel
+                # whose requested correction overshoots the write by more
+                # than one grid step is a rail (stuck column / macro
+                # dropout — the fault dominates any finite bias): the
+                # test mode has MEASURED it as unhealable, so mask it
+                # here, at its own layer, instead of waiting for post-heal
+                # canaries to write off whichever downstream layer the
+                # corruption happens to surface at
+                requested = (np.asarray(hwp.bias[name], np.float32)
+                             - np.asarray(est, np.float32))
+                shortfall = np.abs(np.asarray(new_bias, np.float32)
+                                   - requested)
+                rails = shortfall > 2.0
+                if rails.any():
+                    self.masked[name][rails] = True
+            job["idx"] += self.hcfg.layers_per_tick
+            if job["idx"] >= len(job["layers"]):
+                job["phase"] = "apply"
+            return
+        if job["phase"] == "apply":
+            heal = {name: (np.asarray(b, np.float32)
+                           - np.asarray(hwp.bias[name], np.float32))
+                    for name, b in job["bias"].items()}
+            srv._set_heal_delta(heal)
+            bias_bits = sum(8 * v.shape[0] for v in heal.values())
+            e = energy.recovery_energy_summary(
+                kws.layer_stats(cfg), n_cal=self.hcfg.calib_windows,
+                bias_bits=bias_bits)
+            self.recovery_energy_uj += e["total_uj"]
+            self.recoveries += 1
+            # a canary launched before the heal would mix pre/post-heal
+            # hops — drop it; the next interval spawns a clean one
+            if self._pending is not None:
+                srv._drop_internal(self._pending["stream"])
+                self._pending = None
+            # re-freeze accepted entries: a re-heal REPLACES the layer's
+            # heal (new measurement noise realization), moving written-off
+            # columns and frozen layers off their frozen reference —
+            # track them to the healed chip, or their stale frozen values
+            # poison every downstream layer's divergence forever
+            chip = srv._chip_delta_j
+            if chip is not None:
+                for name in heal:
+                    if name not in self._healed:
+                        self._healed.append(name)
+                    cur = np.asarray(chip[name], np.float32)
+                    if name in self._frozen_layers:
+                        self._ref_delta[name] = cur.copy()
+                    elif self.masked[name].any():
+                        mask = self.masked[name]
+                        self._ref_delta[name][mask] = cur[mask]
+                self._expected = None
+            # NOTE: _post_heal_fails survives the re-heal — it counts
+            # consecutive failing canaries since the FIRST heal, so a
+            # fault that re-heals without ever coming clean still reaches
+            # stuck_after and gets its columns masked (a reset here would
+            # loop heal -> fail -> re-heal forever)
+            self._ok_streak = 0
+            self._transition(srv, "recovering")
+            self._recovery = None
+
+    # -- accounting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "state": self.state,
+            "canaries": self.canaries,
+            "failed_canaries": self.failed_canaries,
+            "detected_tick": self.detected_tick,
+            "quarantined_tick": self.quarantined_tick,
+            "recoveries": self.recoveries,
+            "recovery_energy_uj": round(self.recovery_energy_uj, 4),
+            "recovery_in_flight": self._recovery is not None,
+            "implicated": self.implicated,
+            "divergence": self.divergence,
+            "masked_channels": {
+                name: [int(c) for c in np.where(m)[0]]
+                for name, m in self.masked.items() if m.any()},
+            "accepted_layers": list(self.accepted_layers),
+            "history": list(self.history),
+        }
+
+    # -- crash safety --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Plain-data state (consumed by StreamServer.snapshot).  The
+        expected reference is NOT serialized — it is a pure function of
+        the server config and the reserved uid, recomputed lazily."""
+        return {
+            "state": self.state, "uid": self._uid,
+            "canary_n": self._canary_n, "last_spawn": self._last_spawn,
+            "fail_streak": self._fail_streak, "ok_streak": self._ok_streak,
+            "post_heal_fails": self._post_heal_fails,
+            "canaries": self.canaries,
+            "failed_canaries": self.failed_canaries,
+            "recoveries": self.recoveries,
+            "recovery_energy_uj": self.recovery_energy_uj,
+            "detected_tick": self.detected_tick,
+            "quarantined_tick": self.quarantined_tick,
+            "pending": dict(self._pending) if self._pending else None,
+            "implicated": {k: list(v) for k, v in self.implicated.items()},
+            "divergence": dict(self.divergence),
+            "masked": {k: v.copy() for k, v in self.masked.items()},
+            "ref_delta": {k: v.copy() for k, v in self._ref_delta.items()},
+            "accepted_layers": list(self.accepted_layers),
+            "healed": list(self._healed),
+            "frozen_layers": list(self._frozen_layers),
+            "history": [dict(h) for h in self.history],
+            "recovery": ({
+                "phase": self._recovery["phase"],
+                "layers": list(self._recovery["layers"]),
+                "idx": self._recovery["idx"],
+                "ideal": (None if self._recovery["ideal"] is None else
+                          {k: np.asarray(v)
+                           for k, v in self._recovery["ideal"].items()}),
+                "keys": (None if self._recovery["keys"] is None else
+                         {k: np.asarray(v)
+                          for k, v in self._recovery["keys"].items()}),
+                "bias": {k: np.asarray(v)
+                         for k, v in self._recovery["bias"].items()},
+            } if self._recovery else None),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.state = str(snap["state"])
+        self._uid = int(snap["uid"])
+        self._canary_n = int(snap["canary_n"])
+        self._last_spawn = int(snap["last_spawn"])
+        self._fail_streak = int(snap["fail_streak"])
+        self._ok_streak = int(snap["ok_streak"])
+        self._post_heal_fails = int(snap["post_heal_fails"])
+        self.canaries = int(snap["canaries"])
+        self.failed_canaries = int(snap["failed_canaries"])
+        self.recoveries = int(snap["recoveries"])
+        self.recovery_energy_uj = float(snap["recovery_energy_uj"])
+        self.detected_tick = (None if snap["detected_tick"] is None
+                              else int(snap["detected_tick"]))
+        self.quarantined_tick = (None if snap["quarantined_tick"] is None
+                                 else int(snap["quarantined_tick"]))
+        self._pending = (dict(snap["pending"]) if snap["pending"]
+                         else None)
+        self.implicated = {k: [int(c) for c in v]
+                           for k, v in snap["implicated"].items()}
+        self.divergence = {k: float(v)
+                           for k, v in snap["divergence"].items()}
+        for name in self.masked:
+            self.masked[name] = np.asarray(snap["masked"][name], bool).copy()
+            self._ref_delta[name] = np.asarray(snap["ref_delta"][name],
+                                               np.float32).copy()
+        self.accepted_layers = [str(n) for n in snap["accepted_layers"]]
+        self._healed = [str(n) for n in snap["healed"]]
+        self._frozen_layers = [str(n) for n in snap["frozen_layers"]]
+        self.history = [dict(h) for h in snap["history"]]
+        r = snap["recovery"]
+        self._recovery = (None if r is None else {
+            "phase": str(r["phase"]), "layers": list(r["layers"]),
+            "idx": int(r["idx"]),
+            "ideal": (None if r["ideal"] is None else
+                      {k: np.asarray(v) for k, v in r["ideal"].items()}),
+            "keys": (None if r["keys"] is None else
+                     {k: np.asarray(v) for k, v in r["keys"].items()}),
+            "bias": {k: np.asarray(v) for k, v in r["bias"].items()},
+        })
+        self._expected = None

@@ -77,6 +77,32 @@ internal slots of the same batch, and the finished profile hot-swapped
 into the stream's per-slot rider rows (bias delta + FC head + silence
 fill) without touching other slots.
 
+**Fault injection + health** (``faults=FaultConfig(...)`` /
+``health=HealthConfig(...)``): a seeded silicon fault model
+(repro.core.faults) rides the batched launches as a chip-global pre-sign
+count delta added to every slot's bias-delta rider row — fault injection
+launches ZERO extra kernels and the one-launch-per-layer invariant holds
+under fault.  The health monitor (repro.serving.health) submits periodic
+canary windows as internal streams of the same batch, localizes faulty
+layers/columns from the captured carries/ring, drives the healthy ->
+degraded -> quarantined -> recovering state machine, re-runs the paper's
+test-mode bias compensation as a tick-resumable background job and
+hot-swaps the heal through the same rider row (``_set_heal_delta``);
+decision events carry ``degraded`` flags while the chip is unhealthy.
+
+**Profiles at admission** (``profiles=ProfileStore(...)``):
+``submit(stream_id, chunk, user_id=...)`` auto-installs the user's stored
+profile onto the assigned slot; a per-tick staleness sweep re-installs
+profiles whose store mtime moved and resets streams whose profile was
+deleted.
+
+**Crash safety**: ``snapshot()`` serializes the complete serving state —
+slot carries and GAP rings, decision/VAD state, noise-field keys, fault
+and health state, mid-flight customization sessions — to an atomically
+written .npz (tmp+fsync+``os.replace``, the ProfileStore idiom);
+``restore()`` on a freshly constructed identically-configured server
+resumes bit-identically to an uninterrupted run (test-enforced).
+
 Per-hop logits flow into the shared decision head
 (repro.serving.decision): smoothing + hysteresis + refractory, batched and
 mask-aware.  ``stats()`` reports per-stream and aggregate decisions/sec,
@@ -88,6 +114,10 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import json
+import os
+import pickle
+import tempfile
 import time
 from typing import Dict, List, Optional
 
@@ -111,17 +141,28 @@ class DynamicHopConfig:
     ``widen_after`` consecutive calm ticks the effective hop doubles,
     capped at ``max_multiplier`` x the base hop and at what the stream
     geometry admits; any hot posterior or VAD wake narrows back to the
-    base hop immediately."""
+    base hop immediately.
+
+    ``calm_silence`` (duty-aware widening): a separate, typically smaller
+    calm-tick threshold used when the whole tick was VAD-silent (every
+    ready hop gated) — silence earns the wider hop faster than merely
+    unconvincing speech.  None (the default) keeps one threshold for
+    both, bit-identical to the pre-knob behavior; streams submitted with
+    ``force="speech"``/``force_compute`` never count as silent, so forced
+    paths are unaffected."""
 
     max_multiplier: int = 4
     widen_after: int = 6
     calm_score: float = 0.35
+    calm_silence: Optional[int] = None
 
     def __post_init__(self):
         if self.max_multiplier < 1:
             raise ValueError("max_multiplier must be >= 1")
         if self.widen_after < 1:
             raise ValueError("widen_after must be >= 1")
+        if self.calm_silence is not None and self.calm_silence < 1:
+            raise ValueError("calm_silence must be >= 1 (or None)")
 
 
 jax.tree_util.register_static(DynamicHopConfig)
@@ -190,6 +231,10 @@ class _Stream:
     custom: Optional[dict] = None         # per-stream riders: {"delta":
     #                                       {conv_i: (C_i,)}, "head":
     #                                       (fc_w, fc_b), "fills": tuple}
+    # -- profile store (repro.checkpoint.profiles) ------------------------
+    user_id: Optional[str] = None         # owner in the profile store
+    profile_mtime: Optional[int] = None   # installed profile's st_mtime_ns
+    #                                       (None: no profile installed)
 
 
 def _select_state(mask: jax.Array, new, old):
@@ -204,6 +249,81 @@ def _scatter_slot(state, one, slot):
                                   state, one)
 
 
+# -- crash-safe snapshot codec ----------------------------------------------
+#
+# A generic tree -> (JSON spec, array table) encoder: arrays are stored
+# losslessly as .npz entries (the fixed-point grids round-trip exactly,
+# which is what makes restore bit-identical), registered NamedTuples
+# round-trip by class name, and config dataclasses fall back to pickle
+# bytes stored as uint8 arrays.  Snapshots are an own-file trust domain
+# (like the profile store): only restore snapshots you wrote.
+
+def _snap_class(name: str):
+    if name == "HeadState":
+        from repro.core.onchip_training import HeadState
+        return HeadState
+    return {"StreamState": sv.StreamState,
+            "WindowState": sv.WindowState,
+            "DecisionState": dec.DecisionState,
+            "VADState": vd.VADState}[name]
+
+
+def _snap_encode(obj, arrays: Dict[str, np.ndarray]) -> dict:
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, (bool, int, float, str)):
+        return {"t": "v", "v": obj}
+    if isinstance(obj, np.integer):
+        return {"t": "v", "v": int(obj)}
+    if isinstance(obj, np.floating):
+        return {"t": "v", "v": float(obj)}
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        k = f"a{len(arrays)}"
+        arrays[k] = np.asarray(obj)
+        return {"t": "arr", "k": k}
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+        return {"t": "nt", "c": type(obj).__name__,
+                "items": [_snap_encode(x, arrays) for x in obj]}
+    if isinstance(obj, tuple):
+        return {"t": "tuple", "items": [_snap_encode(x, arrays)
+                                        for x in obj]}
+    if isinstance(obj, list):
+        return {"t": "list", "items": [_snap_encode(x, arrays)
+                                       for x in obj]}
+    if isinstance(obj, dict):
+        keys = list(obj.keys())
+        if not all(isinstance(k, str) for k in keys):
+            raise TypeError(f"snapshot dicts need str keys: {keys!r}")
+        return {"t": "dict", "keys": keys,
+                "items": [_snap_encode(obj[k], arrays) for k in keys]}
+    k = f"a{len(arrays)}"
+    arrays[k] = np.frombuffer(pickle.dumps(obj), dtype=np.uint8)
+    return {"t": "pkl", "k": k}
+
+
+def _snap_decode(spec: dict, arrays: Dict[str, np.ndarray]):
+    t = spec["t"]
+    if t == "none":
+        return None
+    if t == "v":
+        return spec["v"]
+    if t == "arr":
+        return np.asarray(arrays[spec["k"]])
+    if t == "pkl":
+        return pickle.loads(bytes(np.asarray(arrays[spec["k"]])))
+    if t == "nt":
+        cls = _snap_class(spec["c"])
+        return cls(*[_snap_decode(x, arrays) for x in spec["items"]])
+    if t == "tuple":
+        return tuple(_snap_decode(x, arrays) for x in spec["items"])
+    if t == "list":
+        return [_snap_decode(x, arrays) for x in spec["items"]]
+    if t == "dict":
+        return {k: _snap_decode(x, arrays)
+                for k, x in zip(spec["keys"], spec["items"])}
+    raise ValueError(f"unknown snapshot node type {t!r}")
+
+
 class StreamServer:
     """Admit / batch / gate / decide / evict over an autoscaling slot pool."""
 
@@ -216,6 +336,8 @@ class StreamServer:
                  dynamic_hop: Optional[DynamicHopConfig] = None,
                  admission: Optional[AdmissionConfig] = None,
                  batch_init: bool = True,
+                 faults=None, health=None, profiles=None,
+                 silence_fill: str = "constant",
                  seed: int = 0):
         self.cfg = cfg
         self.streaming = streaming
@@ -242,10 +364,24 @@ class StreamServer:
                     f"({slots}) <= max_slots ({self.max_slots})")
         self.slots = slots
 
+        if silence_fill not in ("constant", "retention"):
+            raise ValueError(f"silence_fill={silence_fill!r}: use "
+                             f"'constant' or 'retention'")
+        self.silence_fill = silence_fill
         self._fills = None
         if vad is not None and streaming:
-            sils = kws.silence_columns(hw, cfg, chip_offsets=chip_offsets)
-            self._fills = sv.silence_fills(cfg, sils)
+            if silence_fill == "retention":
+                # chip-accurate gated fill: hold one *noisy* SA read per
+                # column (what the retained array actually latched) instead
+                # of the noiseless silence response
+                self._fills = sv.retention_fills(
+                    hw, cfg,
+                    key=jax.random.fold_in(jax.random.PRNGKey(seed), 0x517),
+                    sa_noise_std=sa_noise_std, chip_offsets=chip_offsets)
+            else:
+                sils = kws.silence_columns(hw, cfg,
+                                           chip_offsets=chip_offsets)
+                self._fills = sv.silence_fills(cfg, sils)
 
         # customization (repro.serving.customize): once enabled, batched
         # hops route through the per-slot (bias delta, FC head) variant so
@@ -301,6 +437,27 @@ class StreamServer:
             self._vad_fn = jax.jit(
                 lambda vs, audio, active: vd.vad_step(vcfg, vs, audio,
                                                       active))
+
+        # -- robustness: faults, health monitoring, profile store ----------
+        self._profiles = profiles              # ProfileStore or None
+        self._profile_swaps = 0
+        self._heal_delta = None                # {conv_i: np (C_i,)} healing
+        #                                        bias correction (counts)
+        self._chip_delta_j = None              # cached jnp fault+heal sum
+        self._faults = None
+        if faults is not None:
+            from repro.core import faults as flt
+            self._faults = (faults if isinstance(faults, flt.FaultModel)
+                            else flt.FaultModel.for_config(cfg, faults))
+            # route every batched call through the rider variant up front
+            # so fault deltas can hot-swap in without a mid-run mode flip
+            self._enable_customization()
+            if self._faults.pop_dirty():
+                self._refresh_chip_delta()
+        self._health = None
+        if health is not None:
+            from repro.serving import health as hl
+            self._health = hl.HealthMonitor(self, health)
 
     # -- hop-multiplier engine table ----------------------------------------
 
@@ -470,7 +627,83 @@ class StreamServer:
                 for t, f in zip(self._slot_fills, custom["fills"]))
 
     def _slot_custom_args(self):
-        return (self._slot_delta, self._slot_head_w, self._slot_head_b)
+        delta = self._slot_delta
+        chip = self._chip_delta_j
+        if chip is not None:
+            # the chip-global fault+heal offset rides every slot's existing
+            # bias-delta row — same operands, same launches: injection and
+            # healing are free at serve time
+            delta = {k: v + chip[k][None] for k, v in delta.items()}
+        return (delta, self._slot_head_w, self._slot_head_b)
+
+    def _row_custom(self, rec: "_Stream"):
+        """Rider args for the sequential B=1 init paths (``batch_init``
+        off, hop-retarget re-inits), combining the stream's own
+        customization with the chip-global fault/heal delta.  None when
+        neither applies (base init path)."""
+        chip = self._chip_delta_j
+        if not self._cust_on or (rec.custom is None and chip is None):
+            return None
+        cfg = self.cfg
+        if rec.custom is not None:
+            delta = {name: jnp.asarray(rec.custom["delta"][name])
+                     for name in cfg.imc_layer_names()}
+            hw1, hb1 = (jnp.asarray(rec.custom["head"][0]),
+                        jnp.asarray(rec.custom["head"][1]))
+        else:
+            delta = {name: jnp.zeros((cfg.channels[int(name[4:])],))
+                     for name in cfg.imc_layer_names()}
+            hw1, hb1 = self._base_head()
+        if chip is not None:
+            delta = {k: v + chip[k] for k, v in delta.items()}
+        return ({k: v[None] for k, v in delta.items()},
+                hw1[None], hb1[None])
+
+    # -- fault injection + self-healing -------------------------------------
+
+    @property
+    def faults(self):
+        """The live FaultModel (None unless constructed with ``faults=``).
+        Inject through it between ticks — the next ``step()`` notices the
+        dirty flag and refreshes the rider operands."""
+        return self._faults
+
+    @property
+    def health(self):
+        """The HealthMonitor (None unless constructed with ``health=``)."""
+        return self._health
+
+    def _refresh_chip_delta(self) -> None:
+        """Rebuild the cached chip-global per-layer count delta = injected
+        faults + healing correction.  None when the chip is pristine and
+        unhealed, which keeps the rider rows bit-exact base values."""
+        fault = (self._faults.deltas()
+                 if self._faults is not None and self._faults.active
+                 else None)
+        if fault is None and self._heal_delta is None:
+            self._chip_delta_j = None
+            return
+        out = {}
+        for name in self.cfg.imc_layer_names():
+            v = np.zeros((self.cfg.channels[int(name[4:])],), np.float32)
+            if fault is not None:
+                v = v + fault[name]
+            if self._heal_delta is not None and name in self._heal_delta:
+                v = v + self._heal_delta[name]
+            out[name] = jnp.asarray(v)
+        self._chip_delta_j = out
+
+    def _set_heal_delta(self, heal: Dict[str, np.ndarray]) -> None:
+        """Hot-swap a healing bias correction (per-layer pre-sign count
+        deltas, from the health monitor's background recompensation) into
+        every batched launch.  Entries replace any previous heal for the
+        same layer — recoveries are recomputed from the pristine stored
+        bias, so repeated heals never stack."""
+        self._enable_customization()
+        cur = dict(self._heal_delta or {})
+        cur.update({k: np.asarray(v, np.float32) for k, v in heal.items()})
+        self._heal_delta = cur
+        self._refresh_chip_delta()
 
     def customize(self, stream_id: str, ccfg=None):
         """Open an enrollment/fine-tuning session attached to a live
@@ -514,16 +747,21 @@ class StreamServer:
             self._write_slot_custom(rec.slot, rec.custom)
 
     def _submit_internal(self, stream_id: str, wav: np.ndarray,
-                         custom: Optional[dict] = None) -> "_Stream":
+                         custom: Optional[dict] = None,
+                         uid: Optional[int] = None) -> "_Stream":
         """Enqueue a session-owned replay stream: rides the normal slot
         machinery and the SAME batched launches, but emits no decision
         events, bypasses the admission-queue bound and is exempt from SLO
         shedding.  Finished on arrival — it retires as soon as its audio
-        drains (the session captures its features first)."""
-        rec = _Stream(stream_id=stream_id, uid=self._uid,
+        drains (the session captures its features first).  ``uid`` pins
+        the stream's noise-field key to a reserved uid (health canaries
+        reuse one key so every canary sees the identical field)."""
+        rec = _Stream(stream_id=stream_id,
+                      uid=self._uid if uid is None else uid,
                       buf=np.asarray(wav, np.float32), internal=True,
                       force_compute=True, custom=custom, finished=True)
-        self._uid += 1
+        if uid is None:
+            self._uid += 1
         self._streams[stream_id] = rec
         self._queue.append(rec)
         self._try_admit()
@@ -543,11 +781,18 @@ class StreamServer:
 
     # -- stream lifecycle ---------------------------------------------------
 
-    def submit(self, stream_id: str, chunk: np.ndarray) -> str:
+    def submit(self, stream_id: str, chunk: np.ndarray,
+               user_id: Optional[str] = None) -> str:
         """Append audio to a stream (created on first submit).  Returns the
         stream's placement: 'slot' (live), 'queued' (awaiting a slot) or
         'rejected' (admission queue full — nothing was buffered; the
-        caller may retry later)."""
+        caller may retry later).
+
+        ``user_id`` (needs ``profiles=`` at construction) associates the
+        stream with a profile-store user: their stored customization is
+        auto-installed onto whichever slot the stream lands on, and the
+        per-tick staleness sweep re-installs it if the store's copy
+        changes (or resets to base if it is deleted)."""
         rec = self._streams.get(stream_id)
         if rec is None:
             if (self.acfg is not None and self.acfg.max_queue is not None
@@ -563,8 +808,70 @@ class StreamServer:
             self._try_admit()
         if rec.finished:
             raise ValueError(f"stream {stream_id} already finished")
+        if user_id is not None and user_id != rec.user_id:
+            if self._profiles is None:
+                raise ValueError("submit(user_id=...) needs a profile "
+                                 "store: construct with profiles=")
+            self._attach_profile(rec, user_id)
         rec.buf = np.concatenate([rec.buf, np.asarray(chunk, np.float32)])
         return "slot" if rec.slot is not None else "queued"
+
+    # -- profile store: auto-install + staleness sweep ----------------------
+
+    def _attach_profile(self, rec: "_Stream", user_id: str) -> None:
+        """Associate ``rec`` with a store user and install their profile
+        if one exists.  A user with no stored profile serves the base
+        model but stays associated — a later enrollment save is picked up
+        by the staleness sweep."""
+        rec.user_id = user_id
+        rec.profile_mtime = None
+        if self._profiles.mtime(user_id) is not None:
+            self._install_profile(rec)
+
+    def _install_profile(self, rec: "_Stream") -> None:
+        """(Re)load ``rec.user_id``'s stored profile and program its rider
+        rows.  The mtime is read *before* the load: if the file is
+        replaced mid-install the recorded stamp is stale and the next
+        sweep simply reinstalls."""
+        from repro.serving import customize as cz
+        rec.profile_mtime = self._profiles.mtime(rec.user_id)
+        result = self._profiles.load(rec.user_id)
+        self._enable_customization()
+        rec.custom = cz.result_riders(result, self._hw, self.cfg,
+                                      chip_offsets=self._engine_kw
+                                      ["chip_offsets"],
+                                      with_fills=self._fills is not None)
+        if rec.slot is not None:
+            self._write_slot_custom(rec.slot, rec.custom)
+
+    def _reset_profile(self, rec: "_Stream") -> None:
+        rec.custom = None
+        rec.profile_mtime = None
+        if rec.slot is not None:
+            self._write_slot_custom(rec.slot, None)
+
+    def _check_profiles(self) -> None:
+        """Stale-profile eviction (once per tick): any live stream whose
+        stored profile changed under it (``st_mtime_ns`` moved — every
+        ``ProfileStore.save`` is a fresh inode) is re-installed from the
+        fresh file; a stream whose profile was deleted drops back to the
+        base model."""
+        if self._profiles is None:
+            return
+        for rec in self._streams.values():
+            if rec.user_id is None:
+                continue
+            m = self._profiles.mtime(rec.user_id)
+            if m == rec.profile_mtime:
+                continue
+            self._profile_swaps += 1
+            if m is None:
+                self._reset_profile(rec)
+            else:
+                try:
+                    self._install_profile(rec)
+                except FileNotFoundError:  # deleted between stat and load
+                    self._reset_profile(rec)
 
     def finish(self, stream_id: str) -> None:
         """Producer signals end-of-stream: the slot is freed once the
@@ -745,13 +1052,10 @@ class StreamServer:
             if len(rec.recent) >= window:
                 key = jax.random.fold_in(self._base_key, rec.uid)[None]
                 t0 = time.perf_counter()
-                if self._cust_on and rec.custom is not None:
-                    d1 = {name: jnp.asarray(rec.custom["delta"][name])[None]
-                          for name in self._slot_delta}
+                d1 = self._row_custom(rec)
+                if d1 is not None:
                     _, one = eng.init_custom(
-                        jnp.asarray(rec.recent[None, -window:]), key, d1,
-                        jnp.asarray(rec.custom["head"][0])[None],
-                        jnp.asarray(rec.custom["head"][1])[None])
+                        jnp.asarray(rec.recent[None, -window:]), key, *d1)
                 else:
                     _, one = eng.init(
                         jnp.asarray(rec.recent[None, -window:]), key)
@@ -765,7 +1069,8 @@ class StreamServer:
         self._mult = mult
         self._hop_retargets += 1
 
-    def _retarget_hop(self, events: List[dict], woke: bool) -> None:
+    def _retarget_hop(self, events: List[dict], woke: bool,
+                      silent: bool = False) -> None:
         if self.hcfg is None:
             return
         max_score = max((e["score"] for e in events), default=0.0)
@@ -775,7 +1080,11 @@ class StreamServer:
                 self._set_mult(1)
             return
         self._calm_ticks += 1
-        if self._calm_ticks >= self.hcfg.widen_after:
+        after = self.hcfg.widen_after
+        if silent and self.hcfg.calm_silence is not None:
+            after = self.hcfg.calm_silence   # duty-aware: silence widens
+            #                                  faster than low-score speech
+        if self._calm_ticks >= after:
             self._calm_ticks = 0
             # clamp to the cap so non-power-of-two max_multipliers are
             # still reachable (any integer multiple of the base hop keeps
@@ -857,13 +1166,10 @@ class StreamServer:
             rec.buf = rec.buf[window:]
             key = jax.random.fold_in(self._base_key, rec.uid)[None]
             t0 = time.perf_counter()
-            if self._cust_on and rec.custom is not None:
-                d1 = {name: jnp.asarray(rec.custom["delta"][name])[None]
-                      for name in self._slot_delta}
-                hw1 = jnp.asarray(rec.custom["head"][0])[None]
-                hb1 = jnp.asarray(rec.custom["head"][1])[None]
+            d1 = self._row_custom(rec)
+            if d1 is not None:
                 logits, one = self.engine.init_custom(
-                    jnp.asarray(first[None]), key, d1, hw1, hb1)
+                    jnp.asarray(first[None]), key, *d1)
             else:
                 logits, one = self.engine.init(jnp.asarray(first[None]), key)
             self._state = self._scatter(self._state, one, s)
@@ -882,6 +1188,11 @@ class StreamServer:
         speech-ready slot and ONE masked no-op fill over every gated slot,
         then the batched decision update.  Returns this tick's decision
         events (one per deciding stream; gated hops emit none)."""
+        self._check_profiles()
+        if self._faults is not None:
+            self._faults.tick()                 # advance offset drift
+            if self._faults.pop_dirty():
+                self._refresh_chip_delta()      # riders pick up new deltas
         self._enforce_slo()
         self._autoscale()
         bundle = self._bundle(self._mult)
@@ -911,6 +1222,10 @@ class StreamServer:
                 # feature buffer, so learning streams bypass the VAD gate
                 if ready[s] and rec is not None and rec.force_compute:
                     speech[s] = True
+        # a tick is *silent* when hops ran but none carried speech — the
+        # duty-aware dynamic hop widens faster on these (force_compute
+        # streams count as speech, so forced paths never look silent)
+        silent_tick = bool(ready.any()) and not bool((speech & ready).any())
 
         compute_mask = np.zeros((self.slots,), bool)
         fill_mask = np.zeros((self.slots,), bool)
@@ -1053,6 +1368,15 @@ class StreamServer:
         # feature captures must see the post-hop states before slots retire
         if self._cust is not None:
             self._cust.on_step(self)
+        if self._health is not None:
+            self._health.on_step(self)          # canary carry/ring capture
+
+        # decisions emitted while the chip is not healthy are flagged so
+        # downstream consumers can discount (or re-request) them
+        if self._health is not None:
+            degraded = self._health.state != "healthy"
+            for ev in events:
+                ev["degraded"] = degraded
 
         # retire drained finished streams
         for rec in list(self._slots):
@@ -1061,11 +1385,15 @@ class StreamServer:
                                         else window)):
                 self._free_slot(rec)
         self._steps += 1
-        self._retarget_hop(events, woke=bool(replays))
+        self._retarget_hop(events, woke=bool(replays), silent=silent_tick)
         # background learning jobs: calibration layers, feature-replay
         # spawns, bounded fine-tune epochs, hot swaps
         if self._cust is not None:
             self._cust.tick(self)
+        # health background work: canary spawns + tick-resumable
+        # recompensation (calibration layers, heal hot-swap)
+        if self._health is not None:
+            self._health.tick(self)
         return events
 
     def drain(self, max_steps: int = 10_000) -> List[dict]:
@@ -1082,6 +1410,194 @@ class StreamServer:
             if after == before:
                 break
         return events
+
+    # -- crash-safe snapshots ------------------------------------------------
+
+    _COUNTERS = ("_steps", "_hop_wall_s", "_decisions", "_speech_hops",
+                 "_gated_hops", "_learn_hops", "_rejected", "_shed_events",
+                 "_shed_samples", "_calm_ticks", "_pressure_ticks",
+                 "_idle_ticks", "_hop_retargets", "_init_calls",
+                 "_hop_calls", "_replay_calls", "_gate_calls",
+                 "_profile_swaps")
+
+    def snapshot(self, path: Optional[str] = None):
+        """Serialize the complete serving state — slot carries and GAP
+        rings, decision/VAD state, per-stream buffers and noise-field
+        keys, queue order, fault/health state, the healing delta and
+        every mid-flight customization session — so a restarted process
+        can ``restore()`` and continue **bit-identically** to an
+        uninterrupted run (test-enforced).
+
+        Take snapshots at tick boundaries (between ``step()`` calls —
+        that is the only consistent cut).  With ``path`` the snapshot is
+        written as one .npz, atomically (tmp + fsync + ``os.replace``,
+        the ProfileStore idiom): a crash mid-save leaves the previous
+        snapshot intact.  Without ``path`` the in-memory snapshot dict is
+        returned (useful for tests and warm standbys)."""
+        arrays: Dict[str, np.ndarray] = {}
+        spec = {
+            "version": 1,
+            "config": {"sample_len": self.cfg.sample_len,
+                       "base_hop": self.base_hop,
+                       "streaming": self.streaming,
+                       "sa_noise_std": float(
+                           self._engine_kw["sa_noise_std"]),
+                       "vad": self.vcfg is not None},
+            "slots_n": self.slots,
+            "mult": self._mult,
+            "uid": self._uid,
+            "base_key": _snap_encode(np.asarray(self._base_key), arrays),
+            "state": _snap_encode(self._state, arrays),
+            "dstate": _snap_encode(self._dstate, arrays),
+            "vstate": _snap_encode(self._vstate, arrays),
+            "streams": {sid: _snap_encode(dict(vars(rec)), arrays)
+                        for sid, rec in self._streams.items()},
+            "queue": [rec.stream_id for rec in self._queue],
+            "slot_ids": [None if rec is None else rec.stream_id
+                         for rec in self._slots],
+            "counters": {k: getattr(self, k) for k in self._COUNTERS},
+            "cust_on": self._cust_on,
+            "heal": _snap_encode(self._heal_delta, arrays),
+            "faults": _snap_encode(
+                self._faults.snapshot() if self._faults is not None
+                else None, arrays),
+            "health": _snap_encode(
+                self._health.snapshot() if self._health is not None
+                else None, arrays),
+            "cust": self._snap_sessions(arrays),
+        }
+        if path is None:
+            return {"spec": spec, "arrays": arrays}
+        payload = dict(arrays)
+        payload["meta"] = np.frombuffer(
+            json.dumps(spec).encode("utf-8"), dtype=np.uint8)
+        parent = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(parent, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".tmp.snapshot.", suffix=".npz",
+                                   dir=parent)
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, **payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)                  # atomic commit
+        except Exception:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        return path
+
+    _SESS_SKIP = ("_mgr", "_grads_fn")   # back-ref / jit closure: rebuilt
+
+    def _snap_sessions(self, arrays):
+        if self._cust is None:
+            return None
+        sessions = []
+        for sess in self._cust.sessions:
+            d = {k: v for k, v in vars(sess).items()
+                 if k not in self._SESS_SKIP}
+            sessions.append(_snap_encode(d, arrays))
+        return {"next_sid": self._cust._next_sid, "sessions": sessions}
+
+    def restore(self, snap) -> None:
+        """Restore a snapshot (a path or an in-memory snapshot dict) into
+        THIS server, which must be freshly constructed with the same
+        configuration — model/hw, hop, slot bounds, noise std and chip
+        offsets, decision/VAD/admission configs and the same ``faults=``
+        / ``health=`` / ``profiles=`` wiring.  (The snapshot stores
+        serving *state*; the configuration is code.)  After restore the
+        server continues bit-identically to the uninterrupted original,
+        including SA-noise fields (per-stream keys are restored verbatim)
+        and in-flight enrollment sessions."""
+        if isinstance(snap, (str, os.PathLike)):
+            with np.load(snap, allow_pickle=False) as data:
+                spec = json.loads(bytes(data["meta"]).decode("utf-8"))
+                arrays = {k: data[k] for k in data.files if k != "meta"}
+        else:
+            spec, arrays = snap["spec"], snap["arrays"]
+        if spec.get("version") != 1:
+            raise ValueError(f"unknown snapshot version: "
+                             f"{spec.get('version')!r}")
+        c = spec["config"]
+        if (c["sample_len"] != self.cfg.sample_len
+                or c["base_hop"] != self.base_hop
+                or bool(c["streaming"]) != self.streaming
+                or bool(c["vad"]) != (self.vcfg is not None)):
+            raise ValueError(f"snapshot/server configuration mismatch: "
+                             f"snapshot has {c}")
+        n = int(spec["slots_n"])
+        if not (self.min_slots <= n <= self.max_slots):
+            raise ValueError(f"snapshot slot count {n} outside this "
+                             f"server's [{self.min_slots}, "
+                             f"{self.max_slots}]")
+        self.slots = n
+        self._mult = int(spec["mult"])
+        self._bundle(self._mult)                  # engine for this hop
+        self._uid = int(spec["uid"])
+        self._base_key = jnp.asarray(_snap_decode(spec["base_key"],
+                                                  arrays))
+
+        def jaxify(tree):
+            return jax.tree_util.tree_map(jnp.asarray, tree)
+
+        self._state = jaxify(_snap_decode(spec["state"], arrays))
+        self._dstate = jaxify(_snap_decode(spec["dstate"], arrays))
+        v = _snap_decode(spec["vstate"], arrays)
+        self._vstate = jaxify(v) if v is not None else None
+        self._streams = {}
+        for sid, s_spec in spec["streams"].items():
+            self._streams[sid] = _Stream(**_snap_decode(s_spec, arrays))
+        self._queue = collections.deque(self._streams[sid]
+                                        for sid in spec["queue"])
+        self._slots = [None if sid is None else self._streams[sid]
+                       for sid in spec["slot_ids"]]
+        for k, val in spec["counters"].items():
+            setattr(self, k, val)
+        # riders rebuild from scratch at the restored slot count; per-slot
+        # rows re-materialize deterministically from each stream's
+        # ``custom`` dict, the chip-global row from heal + fault state
+        self._cust_on = False
+        self._slot_delta = None
+        self._slot_head_w = None
+        self._slot_head_b = None
+        self._slot_fills = None
+        self._heal_delta = _snap_decode(spec["heal"], arrays)
+        f = _snap_decode(spec["faults"], arrays)
+        if (f is None) != (self._faults is None):
+            raise ValueError("snapshot fault-model mismatch: construct "
+                             "the server with the same faults= wiring")
+        if f is not None:
+            self._faults.restore(f)
+            self._faults.pop_dirty()
+        h = _snap_decode(spec["health"], arrays)
+        if (h is None) != (self._health is None):
+            raise ValueError("snapshot health mismatch: construct the "
+                             "server with the same health= wiring")
+        if h is not None:
+            self._health.restore(h)
+        if spec["cust_on"]:
+            self._enable_customization()
+        self._refresh_chip_delta()
+        cust = spec["cust"]
+        if cust is None:
+            self._cust = None
+        else:
+            from repro.serving import customize as cz
+            self._cust = cz.CustomizationManager(self)
+            self._cust._next_sid = int(cust["next_sid"])
+            for s_spec in cust["sessions"]:
+                d = _snap_decode(s_spec, arrays)
+                sess = cz.CustomizationSession.__new__(
+                    cz.CustomizationSession)
+                sess._mgr = self._cust
+                sess._grads_fn = None             # jit closure: re-traced
+                for k, val in d.items():
+                    setattr(sess, k, val)
+                if sess._head is not None:
+                    sess._head = jaxify(sess._head)
+                self._cust.sessions.append(sess)
 
     # -- accounting ---------------------------------------------------------
 
@@ -1107,6 +1623,7 @@ class StreamServer:
         duty = (self._speech_hops / total_hops) if total_hops else None
         out = {
             "mode": "streaming" if self.streaming else "recompute",
+            "silence_fill": self.silence_fill,
             "slots": self.slots,
             "slot_range": [self.min_slots, self.max_slots],
             "queue_depth": len(self._queue),
@@ -1145,6 +1662,12 @@ class StreamServer:
         }
         if self._cust is not None:
             out["customization"] = self._cust.stats()
+        if self._profiles is not None:
+            out["profile_swaps"] = self._profile_swaps
+        if self._faults is not None:
+            out["faults"] = self._faults.stats()
+        if self._health is not None:
+            out["health"] = self._health.stats()
         if self.vcfg is not None:
             out["gated_energy"] = {
                 k: round(v, 4) if isinstance(v, float) else v

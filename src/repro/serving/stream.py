@@ -583,6 +583,44 @@ def silence_fills(cfg: kws.KWSConfig,
     return tuple(sil[f"conv{i}"] for i in range(cfg.num_conv_layers))
 
 
+def retention_fills(hw, cfg: kws.KWSConfig, *, key: jax.Array,
+                    sa_noise_std: float,
+                    chip_offsets: Optional[Dict[str, jax.Array]] = None
+                    ) -> Tuple[jax.Array, ...]:
+    """SA-retention ("comfort noise") silence fills: the chip-accurate
+    alternative to the noiseless constant of ``silence_fills``.
+
+    ``kws.silence_columns`` models a gated hop as the *ideal* constant
+    response to silence — correct for an array whose outputs are recomputed
+    on wake.  On silicon the sleeping macros instead *retain* the last
+    latched sense-amplifier read of the silent input, which carries one
+    frozen SA-noise realization: each layer's fill is its silence response
+    evaluated once WITH a deterministic SA read (one noise draw per layer,
+    derived from ``key``), and that retained column — not the fresh ideal
+    one — feeds the next layer's retention evaluation.  Deterministic in
+    ``key``, so gated advances stay reproducible and snapshot-safe.  With
+    ``sa_noise_std=0`` this degenerates to exactly ``silence_fills``
+    (the default the tests pin)."""
+    hwp, _ = kws.as_hw_params(hw)
+    h = jnp.zeros((1, cfg.sample_len, 1))
+    fills = []
+    for i in range(cfg.num_conv_layers):
+        off = sa_key = None
+        if i > 0:
+            if chip_offsets is not None:
+                off = chip_offsets[f"conv{i}"]
+            if sa_noise_std > 0.0:
+                sa_key = jax.random.fold_in(key, i)
+        h = kws.hw_conv_layer(hwp, i, h, cfg, chip_offset=off,
+                              sa_key=sa_key, sa_noise_std=sa_noise_std,
+                              use_kernel=False)
+        col = h[0, 0]
+        fills.append(col)
+        # the retained column is what downstream layers see while asleep
+        h = jnp.broadcast_to(col, (1, h.shape[1], col.shape[0]))
+    return tuple(fills)
+
+
 def gated_step(state: StreamState, cfg: kws.KWSConfig, geom: StreamGeometry,
                fills: Tuple[jax.Array, ...]) -> StreamState:
     """Advance a batch of streams by one *silent* hop without computing.

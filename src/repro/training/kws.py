@@ -244,17 +244,24 @@ def calibration_ideal_counts(hw, xcal: np.ndarray,
 def compensate_layer_bias(bias_int: jax.Array, ideal_counts: jax.Array,
                           chip_offset: jax.Array, key: jax.Array,
                           sa_noise_std: float = 1.0,
-                          macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO
-                          ) -> jax.Array:
+                          macro: imc.IMCMacroConfig = imc.DEFAULT_MACRO,
+                          return_est: bool = False):
     """One layer of test-mode compensation: measure (ideal + static chip
     offset + fresh SA read noise), estimate the per-channel discrepancy and
     fold it into the in-memory BN bias.  ``key`` must be the layer's slot
     of the PRNG split chain (see ``calibrate_and_compensate``) for the
-    step-wise run to reproduce the monolithic one bit-exactly."""
+    step-wise run to reproduce the monolithic one bit-exactly.
+    ``return_est=True`` additionally returns the raw per-channel offset
+    estimate — the caller can compare what the write was asked to cancel
+    against what the clipped/parity bias grid could realize (the serving
+    health monitor masks rail channels this way)."""
     measured = (ideal_counts + chip_offset
                 + sa_noise_std * jax.random.normal(key, ideal_counts.shape))
     est = compensation.estimate_channel_offsets(ideal_counts, measured)
-    return compensation.compensate_bias(bias_int, est, macro)
+    new_bias = compensation.compensate_bias(bias_int, est, macro)
+    if return_est:
+        return new_bias, est
+    return new_bias
 
 
 def calibration_layer_keys(cfg: kws.KWSConfig, seed: int = 0
