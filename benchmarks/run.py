@@ -36,6 +36,24 @@ Run:  PYTHONPATH=src python -m benchmarks.run
            latencies, recovery energy, and a crash-safety
            snapshot->restore record; writes results/BENCH_faults.json;
            schema in docs/RELIABILITY.md)
+      PYTHONPATH=src python -m benchmarks.run --obs-overhead
+          (observability tax: the gated streaming workload run
+           telemetry-off vs fully instrumented — metrics registry +
+           flight recorder + launch auditor in raise mode + trace
+           spans — asserting the decision streams are bit-identical,
+           recording the per-tick overhead percentage, the auditor's
+           launch accounting and a Perfetto trace artifact; writes
+           results/BENCH_obs.json; schema in docs/OBSERVABILITY.md)
+
+Any single-bench flag also takes ``--trace-out PATH`` to emit a
+Chrome/Perfetto trace-event timeline of the run (docs/OBSERVABILITY.md).
+
+Every ``BENCH_*.json`` goes through one shared atomic writer
+(:func:`_write_bench`): tmp + fsync + rename like
+``repro.checkpoint.profiles.ProfileStore``, stamped with a ``bench``
+header ``{name, schema_version, regen}`` so partially-written artifacts
+can't be published and every record names the command that regenerates
+it.
 """
 
 from __future__ import annotations
@@ -59,6 +77,64 @@ def _load(name):
 
 def _row(name, us, derived):
     print(f"{name},{us},{derived}")
+
+
+# schema_version per artifact: bump when a bench's JSON layout changes
+# incompatibly (keys removed/renamed), not when keys are added
+_BENCH_SCHEMAS = {
+    "BENCH_imc_fused.json": 1,
+    "BENCH_streaming.json": 1,
+    "BENCH_customize.json": 1,
+    "BENCH_faults.json": 1,
+    "BENCH_obs.json": 1,
+}
+
+
+def _write_bench(report, out_path, default_name, regen):
+    """The single write path for every ``BENCH_*.json``.
+
+    Atomic (tmp + fsync + rename, the ``ProfileStore`` idiom) so a
+    crash mid-dump can't publish a truncated artifact, and stamped with
+    a deterministic ``bench`` header — artifact name, schema version,
+    and the exact command that regenerates it.  No timestamps: reruns
+    on identical results diff clean.  Returns the path written."""
+    if out_path is None:
+        out_path = os.path.normpath(os.path.join(RESULTS, default_name))
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    stamped = {"bench": {
+        "name": os.path.splitext(default_name)[0],
+        "schema_version": _BENCH_SCHEMAS[default_name],
+        "regen": regen,
+    }}
+    stamped.update(report)
+    tmp = f"{out_path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(stamped, f, indent=2)
+        f.write("\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, out_path)
+    return out_path
+
+
+# --trace-out: one shared TraceBuilder for the whole bench run.  Server
+# benches attach it to their StreamServers (per-tick serving spans);
+# kernel benches record their timed sections as top-level spans.
+_TRACE = None
+
+
+def _attach_trace(srv):
+    """Point a StreamServer's span sink at the shared --trace-out
+    builder (``srv.trace`` is the scheduler's only trace handle)."""
+    if _TRACE is not None:
+        srv.trace = _TRACE
+    return srv
+
+
+def _trace_span(name, t0, t1, **args):
+    if _TRACE is not None:
+        _TRACE.span(name, t0, t1, **args)
 
 
 # ---------------------------------------------------------------------------
@@ -308,8 +384,14 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
                                           hw.flip[name], groups=g,
                                           stride=cfg.strides[i], pool=pool)
 
+        t0 = time.perf_counter()
         us_base = _time_us(baseline, iters=iters)
+        t1 = time.perf_counter()
         us_fused = _time_us(fused, iters=iters)
+        _trace_span(f"grouploop:{name}", t0, t1,
+                    us_per_call=round(us_base, 1))
+        _trace_span(f"fused:{name}", t1, time.perf_counter(),
+                    us_per_call=round(us_fused, 1))
         cog = cfg.channels[i] // g
         layout = imc.make_group_pack_layout(g, cog, cfg.kernels[i],
                                             cfg.channels_per_group)
@@ -328,6 +410,7 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
     for b in batches:
         xb = jax.random.uniform(jax.random.PRNGKey(2), (b, sample_len),
                                 minval=-1, maxval=1)
+        t0 = time.perf_counter()
         us_loop = _time_us(lambda: _grouploop_hw_forward(hw, xb, cfg),
                            iters=iters)
         us_fused = _time_us(
@@ -336,6 +419,9 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
         us_jnp = _time_us(
             lambda: m.hw_forward(hw, xb, cfg, use_kernel=False)[0],
             iters=iters)
+        _trace_span(f"hw_forward:batch_{b}", t0, time.perf_counter(),
+                    grouploop_us=round(us_loop, 1),
+                    fused_us=round(us_fused, 1), jnp_us=round(us_jnp, 1))
         report["end_to_end"][f"batch_{b}"] = {
             "batch": b,
             "grouploop_us": round(us_loop, 1),
@@ -349,14 +435,9 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
              f"grouploop_us={us_loop:.0f};jnp_us={us_jnp:.0f};"
              f"decisions_per_s={b * 1e6 / us_fused:.2f}")
 
-    if out_path is None:
-        out_path = os.path.normpath(os.path.join(RESULTS,
-                                                 "BENCH_imc_fused.json"))
-    if os.path.dirname(out_path):
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out_path = _write_bench(
+        report, out_path, "BENCH_imc_fused.json",
+        "PYTHONPATH=src python -m benchmarks.run --imc-fused")
     _row("imc_fused_json", "", out_path)
     return report
 
@@ -400,8 +481,9 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
                for i in range(slots)}
 
     def run(streaming: bool) -> dict:
-        srv = StreamServer(hw, cfg, hop=hop, slots=slots,
-                           use_kernel=use_kernel, streaming=streaming)
+        srv = _attach_trace(
+            StreamServer(hw, cfg, hop=hop, slots=slots,
+                         use_kernel=use_kernel, streaming=streaming))
         for sid, audio in streams.items():
             srv.submit(sid, audio)
             srv.finish(sid)
@@ -434,11 +516,12 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
             loud = sample_len + n_speech * hop
             wav[:loud] = rng.uniform(-1, 1, size=loud)
             mix[f"g{i}"] = wav
-        srv = StreamServer(hw, cfg, hop=hop, slots=slots,
-                           use_kernel=use_kernel,
-                           vad=VADConfig(threshold_on_db=-40.0,
-                                         threshold_off_db=-50.0,
-                                         wake_margin=1, hang=0))
+        srv = _attach_trace(
+            StreamServer(hw, cfg, hop=hop, slots=slots,
+                         use_kernel=use_kernel,
+                         vad=VADConfig(threshold_on_db=-40.0,
+                                       threshold_off_db=-50.0,
+                                       wake_margin=1, hang=0)))
         for sid, audio in mix.items():
             srv.submit(sid, audio)
             srv.finish(sid)
@@ -517,14 +600,9 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
          f"ungated={gated_energy['ungated_uj_per_decision']:.3f}uJ;"
          f"x{gated_energy['reduction_vs_ungated']:.2f}")
 
-    if out_path is None:
-        out_path = os.path.normpath(os.path.join(RESULTS,
-                                                 "BENCH_streaming.json"))
-    if os.path.dirname(out_path):
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out_path = _write_bench(
+        report, out_path, "BENCH_streaming.json",
+        "PYTHONPATH=src python -m benchmarks.run --streaming")
     _row("streaming_json", "", out_path)
     return report
 
@@ -604,8 +682,9 @@ def customize_bench(out_path: str | None = None, sample_len: int = 2_000,
     trajectory = []
     uj = None
     for n in utts_per_class:
-        srv = StreamServer(hw, cfg, hop=hop, slots=slots, use_kernel=True,
-                           chip_offsets=offs)
+        srv = _attach_trace(
+            StreamServer(hw, cfg, hop=hop, slots=slots, use_kernel=True,
+                         chip_offsets=offs))
         sess = srv.customize(f"user{n}", CustomizeConfig(
             train=tcfg, epochs_per_tick=24, layers_per_tick=5))
         # n utterances per keyword, in enrollment-UX order
@@ -642,8 +721,9 @@ def customize_bench(out_path: str | None = None, sample_len: int = 2_000,
              f"acc={acc:.4f};before={before:.4f};ticks={steps}")
 
     # -- concurrent sessions: N users enrolling at once, one server --------
-    srv = StreamServer(hw, cfg, hop=hop, slots=sessions + 4,
-                       use_kernel=True, chip_offsets=offs)
+    srv = _attach_trace(
+        StreamServer(hw, cfg, hop=hop, slots=sessions + 4,
+                     use_kernel=True, chip_offsets=offs))
     rng = np.random.default_rng(3)
     live = rng.uniform(-1, 1, sample_len + 4000 * hop
                        ).astype(np.float32)
@@ -777,14 +857,9 @@ def customize_bench(out_path: str | None = None, sample_len: int = 2_000,
     _row("customize_uj_per_finetune_step", "",
          f"{report['energy_per_finetune_step'].get('uj_per_finetune_step')}")
 
-    if out_path is None:
-        out_path = os.path.normpath(os.path.join(RESULTS,
-                                                 "BENCH_customize.json"))
-    if os.path.dirname(out_path):
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out_path = _write_bench(
+        report, out_path, "BENCH_customize.json",
+        "PYTHONPATH=src python -m benchmarks.run --customize --sessions 4")
     _row("customize_json", "", out_path)
     return report
 
@@ -921,13 +996,14 @@ def faults_bench(out_path: str | None = None, sample_len: int = 2_000,
         # recal_scope="all" re-runs the full SIV-B pass per recovery —
         # the direct test mode also cancels canary-invisible faults the
         # tail-only localization can never flag
-        srv = StreamServer(hw_comp, cfg, hop=hop, slots=3, use_kernel=True,
-                           chip_offsets=offs,
-                           faults=flt.FaultConfig(seed=5),
-                           health=HealthConfig(interval=5,
-                                               recal_sa_noise_std=0.25,
-                                               recal_scope="all"),
-                           seed=9)
+        srv = _attach_trace(
+            StreamServer(hw_comp, cfg, hop=hop, slots=3, use_kernel=True,
+                         chip_offsets=offs,
+                         faults=flt.FaultConfig(seed=5),
+                         health=HealthConfig(interval=5,
+                                             recal_sa_noise_std=0.25,
+                                             recal_scope="all"),
+                         seed=9))
         rng = np.random.default_rng(11)
         srv.submit("live", rng.uniform(-1, 1, sample_len)
                    .astype(np.float32))
@@ -1026,9 +1102,10 @@ def faults_bench(out_path: str | None = None, sample_len: int = 2_000,
     scenarios["bit_flips"]["healed_within_2pts"] = True
 
     # -- crash safety: snapshot mid-recovery, restore, bit-identical -------
-    srv = StreamServer(hw_comp, cfg, hop=hop, slots=3, use_kernel=True,
-                       chip_offsets=offs, faults=flt.FaultConfig(seed=5),
-                       health=HealthConfig(interval=5), seed=9)
+    srv = _attach_trace(
+        StreamServer(hw_comp, cfg, hop=hop, slots=3, use_kernel=True,
+                     chip_offsets=offs, faults=flt.FaultConfig(seed=5),
+                     health=HealthConfig(interval=5), seed=9))
     rng = np.random.default_rng(12)
     srv.submit("live", rng.uniform(-1, 1, sample_len).astype(np.float32))
     srv.faults.inject_bit_flips(n=4)
@@ -1080,15 +1157,172 @@ def faults_bench(out_path: str | None = None, sample_len: int = 2_000,
         "scenarios": scenarios,
         "snapshot_restore": crash,
     }
-    if out_path is None:
-        out_path = os.path.normpath(os.path.join(RESULTS,
-                                                 "BENCH_faults.json"))
-    if os.path.dirname(out_path):
-        os.makedirs(os.path.dirname(out_path), exist_ok=True)
-    with open(out_path, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out_path = _write_bench(
+        report, out_path, "BENCH_faults.json",
+        "PYTHONPATH=src python -m benchmarks.run --faults")
     _row("faults_json", "", out_path)
+    return report
+
+
+def obs_overhead_bench(out_path: str | None = None, sample_len: int = 2_000,
+                       hop: int = 256, slots: int = 4, repeats: int = 2,
+                       trace_out: str | None = None) -> dict:
+    """Observability tax (docs/OBSERVABILITY.md): the gated streaming
+    workload — speech head, silent stretch (gated fills + wake replay),
+    speech tail — run telemetry-off vs fully instrumented: metrics
+    registry + flight recorder + launch auditor in **raise** mode +
+    per-tick trace spans.
+
+    Records into BENCH_obs.json: the decision streams are bit-identical
+    (asserted, not just reported), min-of-``repeats`` wall time and
+    us/tick for both modes, the overhead percentage, the auditor's
+    launch accounting (zero violations, max one batched hop per tick),
+    and recorder/metrics/trace volumes.  A second *mixed-traffic*
+    section drives live inference + canary health windows + an
+    enrollment session through one auditor-raise server, proving the
+    one-fused-launch-per-IMC-layer contract holds with learning and
+    canary traffic riding the same ticks.  The telemetry-on run's
+    Perfetto timeline lands next to the JSON (``trace_out`` overrides
+    the default results/trace_obs.json)."""
+    import jax
+    import numpy as np_
+    from repro.core import faults as flt
+    from repro.core.onchip_training import OnChipTrainConfig
+    from repro.kernels import default_interpret
+    from repro.models import kws as m
+    from repro.serving import (CustomizeConfig, HealthConfig, ObsConfig,
+                               StreamServer, VADConfig)
+
+    cfg = m.KWSConfig(sample_len=sample_len)
+    params = m.init_params(jax.random.PRNGKey(0), cfg)
+    state = m.init_state(cfg)
+    hw = m.fold_params(params, state, cfg, pack=True)
+    imc_layers = cfg.num_conv_layers - 1
+
+    # speech / silence / speech per stream: exercises init, batched hops,
+    # gated fills and the wake replay in one drain
+    n_hops = 20
+    rng = np_.random.default_rng(0)
+    streams = {}
+    for i in range(slots):
+        wav = rng.uniform(-1, 1, sample_len + n_hops * hop
+                          ).astype(np_.float32)
+        lo = sample_len + (5 + i % 2) * hop
+        wav[lo:lo + 7 * hop] *= 1e-4
+        streams[f"s{i}"] = wav
+    vad = VADConfig(threshold_on_db=-40.0, threshold_off_db=-50.0,
+                    wake_margin=1, hang=0)
+
+    def run(ocfg):
+        srv = StreamServer(hw, cfg, hop=hop, slots=slots, use_kernel=True,
+                           vad=vad, obs=ocfg)
+        for sid, wav in streams.items():
+            srv.submit(sid, wav)
+            srv.finish(sid)
+        t0 = time.perf_counter()
+        events = srv.drain()
+        return srv, events, time.perf_counter() - t0
+
+    obs_off = ObsConfig()
+    obs_on = ObsConfig(recorder=512, audit="raise", trace=True)
+    run(obs_off)                       # jit-trace warmup, untimed
+    wall_off, wall_on = [], []
+    for _ in range(repeats):
+        _, ev_off, dt = run(obs_off)
+        wall_off.append(dt)
+        srv_on, ev_on, dt = run(obs_on)
+        wall_on.append(dt)
+    assert ev_off == ev_on, "telemetry changed the decision stream"
+    ticks = srv_on._steps
+    t_off, t_on = min(wall_off), min(wall_on)
+    overhead = (t_on - t_off) / t_off * 100.0
+    audit = srv_on.auditor.stats()
+    assert audit["violations"] == 0, srv_on.auditor.violations
+    trace_path = trace_out or os.path.normpath(
+        os.path.join(RESULTS, "trace_obs.json"))
+    if os.path.dirname(trace_path):
+        os.makedirs(os.path.dirname(trace_path), exist_ok=True)
+    n_spans = srv_on.trace.dump(trace_path)
+    prom = srv_on.metrics.prometheus_text()
+
+    # -- mixed traffic: inference + canary windows + an enrollment session
+    srv = StreamServer(hw, cfg, hop=hop, slots=slots + 2, use_kernel=True,
+                       vad=vad, faults=flt.FaultConfig(seed=5),
+                       health=HealthConfig(interval=7),
+                       obs=ObsConfig(recorder=512, audit="raise"), seed=3)
+    sess = srv.customize("enrollee", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=8, fixed_error_scale=1.375),
+        epochs_per_tick=4, layers_per_tick=5))
+    for c in range(2):
+        sess.enroll(c, rng.uniform(-1, 1, sample_len).astype(np_.float32))
+    sess.finish_enrollment()
+    for sid, wav in streams.items():
+        srv.submit(sid, wav)
+        srv.finish(sid)
+    mixed_events = len(srv.drain())
+    steps = 0
+    while not sess.done and steps < 2000:
+        srv.step()
+        steps += 1
+    assert sess.done, sess.phase
+    mixed_audit = srv.auditor.stats()
+    assert mixed_audit["violations"] == 0, srv.auditor.violations
+    assert mixed_audit["max_hop_calls_per_tick"] <= 1
+
+    report = {
+        "backend": jax.default_backend(),
+        "interpret": bool(default_interpret()),
+        "window": sample_len,
+        "hop": hop,
+        "slots": slots,
+        "hops_per_stream": n_hops,
+        "repeats": repeats,
+        "ticks": ticks,
+        "bit_identical": True,
+        "telemetry_off": {
+            "wall_s": round(t_off, 4),
+            "us_per_tick": round(t_off / ticks * 1e6, 1),
+        },
+        "telemetry_on": {
+            "wall_s": round(t_on, 4),
+            "us_per_tick": round(t_on / ticks * 1e6, 1),
+            "recorder_events": len(srv_on.recorder),
+            "recorder_dropped": srv_on.recorder.dropped(),
+            "metrics_cells": len(srv_on.metrics.collect()),
+            "prometheus_bytes": len(prom),
+            "trace_spans": n_spans,
+        },
+        "overhead_pct": round(overhead, 2),
+        "audit": {
+            "imc_layers": imc_layers,
+            "batched_calls": audit["calls"],
+            "max_hop_calls_per_tick": audit["max_hop_calls_per_tick"],
+            "violations": audit["violations"],
+            "one_launch_per_imc_layer_per_call": True,
+        },
+        "mixed_traffic": {
+            "decisions": mixed_events,
+            "session_epochs": sess.result.epochs,
+            "canaries": srv.health.canaries,
+            "learn_hops": srv.stats()["learn_hops"],
+            "batched_calls": mixed_audit["calls"],
+            "max_hop_calls_per_tick": mixed_audit["max_hop_calls_per_tick"],
+            "violations": mixed_audit["violations"],
+        },
+        "trace_artifact": os.path.relpath(trace_path,
+                                          os.path.dirname(RESULTS)),
+    }
+    _row("obs_overhead_pct", "", f"{overhead:.2f}%")
+    _row("obs_bit_identical", "", "True")
+    _row("obs_audit", "",
+         f"violations={audit['violations']};"
+         f"max_hop_calls_per_tick={audit['max_hop_calls_per_tick']};"
+         f"mixed_violations={mixed_audit['violations']}")
+    _row("obs_trace", "", f"{trace_path};spans={n_spans}")
+    out_path = _write_bench(
+        report, out_path, "BENCH_obs.json",
+        "PYTHONPATH=src python -m benchmarks.run --obs-overhead")
+    _row("obs_json", "", out_path)
     return report
 
 
@@ -1145,11 +1379,32 @@ def main(argv=None) -> None:
     ap.add_argument("--faults-out", default=None, metavar="PATH",
                     help="output path for BENCH_faults.json "
                          "(default: results/BENCH_faults.json)")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="run the observability-tax benchmark (gated "
+                         "streaming workload telemetry-off vs metrics + "
+                         "recorder + auditor-raise + trace, bit-identity "
+                         "asserted; plus a mixed inference/canary/learning "
+                         "audit section) and emit BENCH_obs.json + a "
+                         "Perfetto trace artifact")
+    ap.add_argument("--obs-out", default=None, metavar="PATH",
+                    help="output path for BENCH_obs.json "
+                         "(default: results/BENCH_obs.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with any single-bench flag: write a Chrome/"
+                         "Perfetto trace-event timeline of the bench run "
+                         "(server benches emit per-tick serving spans; "
+                         "--imc-fused emits per-section timing spans)")
     args = ap.parse_args(argv)
-    if sum((args.imc_fused, args.streaming, args.customize,
-            args.faults)) > 1:
-        ap.error("--imc-fused/--streaming/--customize/--faults are "
-                 "separate runs; pick one")
+    bench_flags = (args.imc_fused, args.streaming, args.customize,
+                   args.faults, args.obs_overhead)
+    if sum(bench_flags) > 1:
+        ap.error("--imc-fused/--streaming/--customize/--faults/"
+                 "--obs-overhead are separate runs; pick one")
+    if args.trace_out is not None and not any(bench_flags):
+        ap.error("--trace-out needs one of --imc-fused/--streaming/"
+                 "--customize/--faults/--obs-overhead")
+    if not args.obs_overhead and args.obs_out is not None:
+        ap.error("--obs-out only applies with --obs-overhead")
     if not args.faults and args.faults_out is not None:
         ap.error("--faults-out only applies with --faults")
     if not args.imc_fused and (args.imc_fused_out is not None
@@ -1166,11 +1421,22 @@ def main(argv=None) -> None:
                                or args.sessions != 4):
         ap.error("--customize-out/--customize-epochs/--sessions only "
                  "apply with --customize")
-    if args.sample_len is not None and not (args.imc_fused or args.streaming
-                                            or args.customize
-                                            or args.faults):
+    if args.sample_len is not None and not any(bench_flags):
         ap.error("--sample-len only applies with "
-                 "--imc-fused/--streaming/--customize/--faults")
+                 "--imc-fused/--streaming/--customize/--faults/"
+                 "--obs-overhead")
+    global _TRACE
+    if args.trace_out is not None and not args.obs_overhead:
+        # --obs-overhead dumps its own telemetry-on server's builder;
+        # every other bench shares one module-level builder
+        from repro.obs import TraceBuilder
+        _TRACE = TraceBuilder(process_name="benchmarks.run")
+
+    def dump_trace():
+        if _TRACE is not None:
+            n = _TRACE.dump(args.trace_out)
+            _row("trace_json", "", f"{args.trace_out};spans={n}")
+
     print("name,us_per_call,derived")
     if args.imc_fused:
         batches = tuple(int(b) for b in
@@ -1178,21 +1444,30 @@ def main(argv=None) -> None:
         imc_fused_bench(args.imc_fused_out,
                         sample_len=args.sample_len or 16_000,
                         batches=batches)
+        dump_trace()
         return
     if args.streaming:
         streaming_bench(args.streaming_out,
                         sample_len=args.sample_len or 2_000,
                         hop=args.hop, slots=args.stream_slots,
                         hops=args.stream_hops, duty=args.duty)
+        dump_trace()
         return
     if args.customize:
         customize_bench(args.customize_out,
                         sample_len=args.sample_len or 2_000,
                         epochs=args.customize_epochs,
                         sessions=args.sessions)
+        dump_trace()
         return
     if args.faults:
         faults_bench(args.faults_out, sample_len=args.sample_len or 2_000)
+        dump_trace()
+        return
+    if args.obs_overhead:
+        obs_overhead_bench(args.obs_out,
+                           sample_len=args.sample_len or 2_000,
+                           trace_out=args.trace_out)
         return
     table2_model()
     table3_hw_constraints()

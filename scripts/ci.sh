@@ -6,7 +6,9 @@
 #   scripts/ci.sh            quick: everything but slow/streaming-marked
 #                            tests, then the streaming bit-exactness tests
 #                            (incl. the VAD-gating equivalence + wake-margin
-#                            replay gates), the customization gates, then
+#                            replay gates), the customization gates, the
+#                            observability gate (telemetry bit-identity +
+#                            auditor-in-raise-mode equivalence slice), then
 #                            the docs check
 #   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
 #                            plus the docs check
@@ -58,4 +60,13 @@ python -m pytest -x -q tests/test_reliability.py \
     -k "canary_detects or drift_fault_heals or one_launch_per_layer \
         or snapshot_restore_bit_identical"
 python -m pytest -x -q -m "streaming and not slow" tests/test_reliability.py
+# observability gate (docs/OBSERVABILITY.md): registry/recorder/auditor
+# unit contracts, telemetry-fully-on == telemetry-off bit-identity (SA
+# noise, chip offsets, fault + canary + learning traffic) and the
+# snapshot v2 round-trip — then the gating-equivalence slice re-run with
+# the launch auditor armed in raise mode through the environment, so a
+# doubled fused launch or a gate fill that touches a kernel aborts CI
+python -m pytest -x -q tests/test_obs.py
+REPRO_OBS_AUDIT=raise python -m pytest -x -q tests/test_serving.py \
+    -k "gated_forced_speech_bitexact or wake_margin_replays"
 python scripts/check_docs.py

@@ -1,0 +1,171 @@
+"""Always-on launch auditor for the one-launch-per-layer invariant.
+
+The serving contract says: every batched scheduler tick issues exactly ONE
+fused ``pallas_call`` per IMC layer for *all* ready slots — inference,
+canary and learning traffic combined — and a gated (silent-fill) tick
+issues ZERO.  Until now that invariant only lived in tests that
+monkeypatch ``pl.pallas_call``.  The auditor promotes it to an opt-in
+runtime interceptor around the fused-kernel launch sites.
+
+Two layers of evidence are combined:
+
+* **call accounting** — the scheduler wraps every batched compute call in
+  :meth:`LaunchAuditor.region`, attributing it to ``(tick, cause)`` where
+  ``cause`` is one of ``init`` / ``hop`` / ``replay`` / ``gate``.  Each
+  compute call implies ``imc_layers`` fused launches (conv0 runs in jnp).
+* **trace verification** — inside a region the auditor intercepts
+  ``pl.pallas_call`` so freshly-traced work is counted for real.  Kernels
+  are jitted (including the per-layer ``imc_fused`` inner jit, whose
+  per-shape traces are cached across outer traces), so a region
+  legitimately traces anywhere from zero (all cache hits) up to
+  ``imc_layers`` fresh launches — but never more: a per-slot or per-hop
+  kernel loop would trace ``B x imc_layers`` on a fresh trace, and a
+  gate region must trace nothing at all.
+
+Per-tick rules (checked in :meth:`end_tick`):
+
+* at most one batched ``hop`` call;
+* at most one ``gate`` fill;
+* at most one ``init`` wave when the server batches admissions
+  (``batch_init=True``; unbatched servers legitimately issue one B=1 init
+  call per admission);
+* no region traces more than ``imc_layers`` fresh launches (``gate``
+  traces zero).
+
+``mode`` selects what a violation does: ``"flag"`` appends to
+:attr:`violations` (and the server surfaces them through ``stats()``),
+``"raise"`` raises :class:`LaunchAuditError` — the CI observability gate
+runs the streaming equivalence slice in raise mode.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from contextlib import contextmanager
+
+from jax.experimental import pallas as pl
+
+__all__ = ["LaunchAuditor", "LaunchAuditError", "AUDIT_MODES"]
+
+AUDIT_MODES = ("off", "flag", "raise")
+
+# causes whose region launches fused kernels (a gate region launches none)
+_COMPUTE_CAUSES = ("init", "hop", "replay")
+
+
+class LaunchAuditError(RuntimeError):
+    """A tick broke the one-launch-per-IMC-layer contract."""
+
+
+class LaunchAuditor:
+    def __init__(self, imc_layers, mode="flag", batch_init=True,
+                 history=256):
+        if mode not in AUDIT_MODES:
+            raise ValueError(f"audit mode must be one of {AUDIT_MODES}, "
+                             f"got {mode!r}")
+        if imc_layers < 1:
+            raise ValueError("imc_layers must be >= 1")
+        self.imc_layers = int(imc_layers)
+        self.mode = mode
+        self.batch_init = bool(batch_init)
+        self.violations = []
+        self._ticks = 0
+        self._calls = {c: 0 for c in _COMPUTE_CAUSES + ("gate",)}
+        self._traced = 0
+        self._tick = None
+        self._tick_calls = None
+        self._history = deque(maxlen=history)
+        self._max_hop_calls = 0
+
+    # -- tick lifecycle ---------------------------------------------------
+
+    def begin_tick(self, tick):
+        self._tick = int(tick)
+        self._tick_calls = []
+
+    def end_tick(self):
+        if self._tick is None:
+            return
+        counts = {c: 0 for c in _COMPUTE_CAUSES + ("gate",)}
+        for call in self._tick_calls:
+            counts[call["cause"]] += 1
+        if counts["hop"] > 1:
+            self._violate("hop", f"{counts['hop']} batched hop calls in "
+                          f"one tick (max 1)")
+        if counts["gate"] > 1:
+            self._violate("gate", f"{counts['gate']} gate fills in one "
+                          f"tick (max 1)")
+        if self.batch_init and counts["init"] > 1:
+            self._violate("init", f"{counts['init']} init waves in one "
+                          f"batched-admission tick (max 1)")
+        launches = sum(counts[c] for c in _COMPUTE_CAUSES) * self.imc_layers
+        self._history.append({"tick": self._tick, "calls": counts,
+                              "launches": launches,
+                              "launches_per_layer":
+                                  launches // self.imc_layers})
+        self._max_hop_calls = max(self._max_hop_calls, counts["hop"])
+        self._ticks += 1
+        self._tick = None
+        self._tick_calls = None
+
+    # -- launch-site interception ----------------------------------------
+
+    @contextmanager
+    def region(self, cause):
+        """Wrap one batched call site; attributes + trace-verifies it."""
+        if cause not in self._calls:
+            raise ValueError(f"unknown launch cause {cause!r}")
+        traced = []
+        real = pl.pallas_call
+
+        def counting(*args, **kwargs):
+            traced.append(kwargs.get("grid"))
+            return real(*args, **kwargs)
+
+        pl.pallas_call = counting
+        try:
+            yield
+        finally:
+            pl.pallas_call = real
+        self._on_call(cause, len(traced))
+
+    def _on_call(self, cause, traced):
+        self._calls[cause] += 1
+        self._traced += traced
+        if self._tick_calls is not None:
+            self._tick_calls.append(
+                {"cause": cause, "traced": traced,
+                 "launches": (self.imc_layers
+                              if cause in _COMPUTE_CAUSES else 0)})
+        if cause == "gate":
+            if traced:
+                self._violate(cause, f"gate fill traced {traced} pallas "
+                              f"launches (must trace 0)")
+        elif traced > self.imc_layers:
+            self._violate(cause, f"{cause} call traced {traced} pallas "
+                          f"launches in one batched call (max "
+                          f"{self.imc_layers} IMC layers)")
+
+    def _violate(self, cause, detail):
+        violation = {"tick": self._tick, "cause": cause, "detail": detail}
+        self.violations.append(violation)
+        if self.mode == "raise":
+            raise LaunchAuditError(
+                f"tick {self._tick}: [{cause}] {detail}")
+
+    # -- reporting --------------------------------------------------------
+
+    def history(self):
+        """Recent per-tick launch attribution, oldest-first."""
+        return list(self._history)
+
+    def stats(self):
+        return {
+            "mode": self.mode,
+            "imc_layers": self.imc_layers,
+            "ticks": self._ticks,
+            "calls": dict(self._calls),
+            "traced_launches": self._traced,
+            "max_hop_calls_per_tick": self._max_hop_calls,
+            "violations": len(self.violations),
+        }

@@ -1,0 +1,73 @@
+"""Per-tick flight recorder: a bounded ring of structured serving events.
+
+The recorder keeps the last ``capacity`` events of the serving loop —
+admissions, evictions, SLO sheds, gate decisions, batched-call
+composition, health-state transitions, heal-job progress and per-tick
+analytical energy — so an alarm or crash can dump the recent history
+without the server having logged anything in steady state.
+
+Events are plain dicts ``{"seq", "tick", "kind", ...fields}``; ``seq`` is
+a monotone sequence number that survives ring wraparound (``dropped()``
+tells how many events fell off the ring).  The ring participates in
+``StreamServer.snapshot()`` via ``snapshot()``/``restore()`` and can be
+dumped to JSON-lines with ``dump(path)``.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import deque
+
+__all__ = ["FlightRecorder"]
+
+_SNAP_VERSION = 1
+
+
+class FlightRecorder:
+    def __init__(self, capacity=256):
+        if capacity < 1:
+            raise ValueError("flight recorder capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._ring = deque(maxlen=self.capacity)
+        self._seq = 0
+
+    def record(self, tick, kind, **fields):
+        event = {"seq": self._seq, "tick": int(tick), "kind": str(kind)}
+        event.update(fields)
+        self._seq += 1
+        self._ring.append(event)
+        return event
+
+    def events(self, kind=None):
+        """Events oldest-first, optionally filtered by ``kind``."""
+        if kind is None:
+            return list(self._ring)
+        return [e for e in self._ring if e["kind"] == kind]
+
+    def __len__(self):
+        return len(self._ring)
+
+    def dropped(self):
+        """How many events have fallen off the ring."""
+        return self._seq - len(self._ring)
+
+    def dump(self, path):
+        """Write the ring oldest-first as JSON lines; returns the count."""
+        events = self.events()
+        with open(path, "w") as f:
+            for event in events:
+                f.write(json.dumps(event, sort_keys=True) + "\n")
+        return len(events)
+
+    def snapshot(self):
+        return {"version": _SNAP_VERSION, "capacity": self.capacity,
+                "seq": self._seq, "events": self.events()}
+
+    def restore(self, payload):
+        if payload.get("version") != _SNAP_VERSION:
+            raise ValueError(
+                f"unsupported recorder snapshot version "
+                f"{payload.get('version')!r}")
+        self.capacity = int(payload["capacity"])
+        self._ring = deque(payload["events"], maxlen=self.capacity)
+        self._seq = int(payload["seq"])

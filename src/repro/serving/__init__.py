@@ -44,6 +44,8 @@ after a restart.
 
 from repro.core.faults import FaultConfig, FaultModel
 from repro.core.sa_noise import SANoiseField
+from repro.obs import (FlightRecorder, LaunchAuditError, LaunchAuditor,
+                       MetricsRegistry, ObsConfig, TraceBuilder)
 from repro.serving.customize import (CustomizationResult,
                                      CustomizationSession, CustomizeConfig)
 from repro.serving.health import HealthConfig, HealthMonitor
@@ -66,9 +68,11 @@ from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
 __all__ = [
     "AdmissionConfig", "CustomizationResult", "CustomizationSession",
     "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
-    "DynamicHopConfig", "FaultConfig", "FaultModel", "HealthConfig",
-    "HealthMonitor", "SANoiseField", "StreamServer", "StreamEngine",
-    "StreamGeometry", "StreamState", "VADConfig", "VADState", "decision_init",
+    "DynamicHopConfig", "FaultConfig", "FaultModel", "FlightRecorder",
+    "HealthConfig", "HealthMonitor", "LaunchAuditError", "LaunchAuditor",
+    "MetricsRegistry", "ObsConfig", "SANoiseField", "StreamServer",
+    "StreamEngine", "StreamGeometry", "StreamState", "TraceBuilder",
+    "VADConfig", "VADState", "decision_init",
     "decision_step", "frame_energy_db", "gated_step", "gated_window_step",
     "hop_alignment", "hop_sa_noise_fields", "make_stream_geometry",
     "retention_fills", "sa_noise_columns", "silence_fills", "stream_init",

@@ -309,6 +309,10 @@ class CustomizationManager:
             map(len, rec.pending))
         self._next_sid += 1
         self.sessions.append(sess)
+        srv._metrics.inc("customize.sessions")
+        if srv._rec is not None:
+            srv._rec.record(srv._steps, "session", stream=stream_id,
+                            sid=sess.sid, phase="enrolling")
         return sess
 
     # -- per-tick hooks (called by StreamServer.step) -----------------------
@@ -365,6 +369,9 @@ class CustomizationManager:
         for sess in self.sessions:
             if sess.phase == "ready" and sess.ccfg.auto_swap:
                 self.swap(sess)
+        srv._metrics.set_gauge(
+            "customize.active_sessions",
+            sum(1 for s in self.sessions if not s.done))
 
     # -- calibration / bias compensation ------------------------------------
 
@@ -488,6 +495,7 @@ class CustomizationManager:
                                        s.ccfg.train)
             for s in batch:
                 s._epoch += 1
+            self.srv._metrics.inc("customize.epochs", len(batch))
         for s in active:
             if budget[s.sid] > 0:
                 acc = float(head_accuracy(s._featsq,
@@ -548,6 +556,11 @@ class CustomizationManager:
             epochs=sess._epoch, n_utterances=len(sess.windows),
             history=list(sess.history), energy=e)
         sess.phase = "ready"
+        srv = self.srv
+        if srv._rec is not None:
+            srv._rec.record(srv._steps, "session", stream=sess.stream_id,
+                            sid=sess.sid, phase="ready",
+                            epochs=sess._epoch)
 
     # -- hot swap -------------------------------------------------------------
 
@@ -569,10 +582,16 @@ class CustomizationManager:
             if rec.slot is not None:
                 srv._write_slot_custom(rec.slot, riders)
         sess.phase = "swapped"
+        srv._metrics.inc("customize.swaps")
+        if srv._rec is not None:
+            srv._rec.record(srv._steps, "session", stream=sess.stream_id,
+                            sid=sess.sid, phase="swapped")
 
     # -- accounting -----------------------------------------------------------
 
     def stats(self) -> dict:
+        # aggregate counts are views over the server's metrics registry
+        reg = self.srv._metrics
         return {
             "sessions": [
                 {"stream": s.stream_id, "phase": s.phase,
@@ -581,4 +600,7 @@ class CustomizationManager:
                                     if s.history else None)}
                 for s in self.sessions
             ],
+            "sessions_started": reg.value("customize.sessions"),
+            "epochs_total": reg.value("customize.epochs"),
+            "swaps": reg.value("customize.swaps"),
         }

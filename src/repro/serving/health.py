@@ -72,6 +72,7 @@ import numpy as np
 
 from repro.core import energy
 from repro.models import kws
+from repro.obs import counter_property
 from repro.serving import stream as sv
 
 
@@ -133,6 +134,14 @@ class HealthMonitor:
 
     STATES = ("healthy", "degraded", "quarantined", "recovering")
 
+    # counters live in the server's metrics registry (repro.obs.metrics);
+    # the attribute API and snapshot()/restore() keep working through
+    # these registry-backed properties
+    canaries = counter_property("health.canaries")
+    failed_canaries = counter_property("health.failed_canaries")
+    recoveries = counter_property("health.recoveries")
+    recovery_energy_uj = counter_property("health.recovery_energy_uj")
+
     def __init__(self, srv, hcfg: HealthConfig):
         if not srv.streaming:
             raise ValueError("health monitoring requires streaming=True "
@@ -144,6 +153,7 @@ class HealthMonitor:
                              "canary state mid-capture)")
         self.hcfg = hcfg
         self.srv = srv
+        self._metrics = srv._metrics      # backs the counter properties
         self.state = "healthy"
         # reserved uid: the canary's SA-noise field key is fixed, so the
         # expected per-layer outputs are computed once and reused forever
@@ -276,8 +286,15 @@ class HealthMonitor:
 
     def _transition(self, srv, state: str) -> None:
         if state != self.state:
+            prev = self.state
             self.state = state
             self.history.append({"tick": srv._steps, "state": state})
+            self._metrics.inc("health.transitions", to=state)
+            self._metrics.set_gauge("health.state",
+                                    self.STATES.index(state))
+            if srv._rec is not None:
+                srv._rec.record(srv._steps, "health", state=state,
+                                prev=prev)
 
     def _evaluate(self, srv, carries: List[np.ndarray],
                   ring: np.ndarray) -> None:
@@ -464,6 +481,9 @@ class HealthMonitor:
                                cfg, self.hcfg.seed + 1
                                + self.recoveries).items()}
             job["phase"] = "layers"
+            if srv._rec is not None:
+                srv._rec.record(srv._steps, "heal", phase="ideal",
+                                layers=list(job["layers"]))
             return
         if job["phase"] == "layers":
             offs = srv._engine_kw["chip_offsets"] or {}
@@ -505,6 +525,10 @@ class HealthMonitor:
             job["idx"] += self.hcfg.layers_per_tick
             if job["idx"] >= len(job["layers"]):
                 job["phase"] = "apply"
+            if srv._rec is not None:
+                srv._rec.record(srv._steps, "heal", phase="layers",
+                                done=min(job["idx"], len(job["layers"])),
+                                total=len(job["layers"]))
             return
         if job["phase"] == "apply":
             heal = {name: (np.asarray(b, np.float32)
@@ -517,6 +541,10 @@ class HealthMonitor:
                 bias_bits=bias_bits)
             self.recovery_energy_uj += e["total_uj"]
             self.recoveries += 1
+            if srv._rec is not None:
+                srv._rec.record(srv._steps, "heal", phase="apply",
+                                layers=sorted(heal),
+                                uj=round(e["total_uj"], 4))
             # a canary launched before the heal would mix pre/post-heal
             # hops — drop it; the next interval spawns a clean one
             if self._pending is not None:

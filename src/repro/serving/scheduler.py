@@ -113,6 +113,7 @@ uJ/decision and per-session customization progress.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import json
 import os
@@ -127,6 +128,8 @@ import numpy as np
 
 from repro.core import energy
 from repro.models import kws
+from repro.obs import (FlightRecorder, LaunchAuditor, MetricsRegistry,
+                       ObsConfig, TraceBuilder, counter_property)
 from repro.serving import decision as dec
 from repro.serving import stream as sv
 from repro.serving import vad as vd
@@ -327,6 +330,31 @@ def _snap_decode(spec: dict, arrays: Dict[str, np.ndarray]):
 class StreamServer:
     """Admit / batch / gate / decide / evict over an autoscaling slot pool."""
 
+    # Every counter lives in the metrics registry (repro.obs.metrics); the
+    # historical attribute API (``srv._steps += 1`` and external readers
+    # like the concurrent-session bench's per-tick call deltas) is kept by
+    # registry-backed properties.  snapshot()/restore() round-trip the
+    # whole registry, so there is no hand-maintained key list to drift.
+    _steps = counter_property("serving.steps")
+    _hop_wall_s = counter_property("serving.hop_wall_s")
+    _decisions = counter_property("serving.decisions")
+    _speech_hops = counter_property("serving.hops", kind="speech")
+    _gated_hops = counter_property("serving.hops", kind="gated")
+    _learn_hops = counter_property("serving.hops", kind="learn")
+    _rejected = counter_property("serving.rejected_streams")
+    _shed_events = counter_property("serving.shed", what="events")
+    _shed_samples = counter_property("serving.shed", what="samples")
+    _calm_ticks = counter_property("serving.dynhop.calm_ticks")
+    _pressure_ticks = counter_property("serving.autoscale.pressure_ticks")
+    _idle_ticks = counter_property("serving.autoscale.idle_ticks")
+    _hop_retargets = counter_property("serving.hop_retargets")
+    _init_calls = counter_property("serving.batched_calls", cause="init")
+    _hop_calls = counter_property("serving.batched_calls", cause="hop")
+    _replay_calls = counter_property("serving.batched_calls",
+                                     cause="replay")
+    _gate_calls = counter_property("serving.batched_calls", cause="gate")
+    _profile_swaps = counter_property("serving.profile_swaps")
+
     def __init__(self, hw, cfg: kws.KWSConfig, *, hop: int, slots: int = 4,
                  chip_offsets: Optional[Dict[str, jax.Array]] = None,
                  sa_noise_std: float = 0.0, use_kernel: bool = True,
@@ -338,7 +366,20 @@ class StreamServer:
                  batch_init: bool = True,
                  faults=None, health=None, profiles=None,
                  silence_fill: str = "constant",
+                 obs: Optional[ObsConfig] = None,
                  seed: int = 0):
+        # the registry backs every counter attribute — create it before
+        # the first counter write below
+        self._metrics = MetricsRegistry()
+        self.obs = obs if obs is not None else ObsConfig.from_env()
+        self._rec = (FlightRecorder(self.obs.recorder)
+                     if self.obs.recorder else None)
+        self._audit = (LaunchAuditor(cfg.num_conv_layers - 1,
+                                     mode=self.obs.audit,
+                                     batch_init=batch_init)
+                       if self.obs.audit != "off" else None)
+        self.trace = TraceBuilder() if self.obs.trace else None
+        self._uj_consts: Dict[int, tuple] = {}   # mult -> (speech, gated)
         self.cfg = cfg
         self.streaming = streaming
         self.base_hop = hop
@@ -566,6 +607,45 @@ class StreamServer:
     @property
     def hop_multiplier(self) -> int:
         return self._mult
+
+    # -- observability helpers ----------------------------------------------
+
+    @property
+    def metrics(self) -> MetricsRegistry:
+        """The server's metrics registry (always on: it backs stats())."""
+        return self._metrics
+
+    @property
+    def recorder(self):
+        """The flight recorder (None unless ``obs.recorder > 0``)."""
+        return self._rec
+
+    @property
+    def auditor(self):
+        """The launch auditor (None unless ``obs.audit != 'off'``)."""
+        return self._audit
+
+    def _region(self, cause: str):
+        """Launch-auditor region around one batched call site (no-op
+        context when the auditor is off)."""
+        if self._audit is None:
+            return contextlib.nullcontext()
+        return self._audit.region(cause)
+
+    def _tick_uj(self, computed: int, gated: int) -> float:
+        """Analytical uJ for one tick's hop composition, from constants
+        precomputed per hop-multiplier (computed hops are charged the
+        full ungated per-decision energy, gated fills leakage only)."""
+        consts = self._uj_consts.get(self._mult)
+        if consts is None:
+            offline = kws.layer_stats(self.cfg)
+            streaming = sv.streaming_layer_stats(self.cfg, self.geom)
+            g = energy.gated_energy_summary(offline, streaming,
+                                            hop_samples=self.hop,
+                                            duty_cycle=1.0)
+            consts = (g["ungated_uj_per_decision"], g["idle_uj_per_hop"])
+            self._uj_consts[self._mult] = consts
+        return computed * consts[0] + gated * consts[1]
 
     # -- customization: per-slot riders + session manager -------------------
 
@@ -799,6 +879,9 @@ class StreamServer:
                     and all(r is not None for r in self._slots)
                     and len(self._queue) >= self.acfg.max_queue):
                 self._rejected += 1
+                if self._rec is not None:
+                    self._rec.record(self._steps, "reject",
+                                     stream=stream_id)
                 return "rejected"
             rec = _Stream(stream_id=stream_id, uid=self._uid,
                           buf=np.zeros((0,), np.float32))
@@ -894,6 +977,9 @@ class StreamServer:
         self._slots[s] = None
         rec.slot = None
         self._write_slot_custom(s, None)
+        if self._rec is not None:
+            self._rec.record(self._steps, "evict", stream=rec.stream_id,
+                             slot=s, internal=rec.internal)
         self._try_admit()
 
     def _try_admit(self) -> None:
@@ -936,6 +1022,9 @@ class StreamServer:
             rec.shed_samples += dropped
             self._shed_events += 1
             self._shed_samples += dropped
+            if self._rec is not None:
+                self._rec.record(self._steps, "shed",
+                                 stream=rec.stream_id, samples=dropped)
 
     def _autoscale(self) -> None:
         if self.acfg is None or self.max_slots <= self.min_slots:
@@ -1068,6 +1157,9 @@ class StreamServer:
         self._state = new_state
         self._mult = mult
         self._hop_retargets += 1
+        if self._rec is not None:
+            self._rec.record(self._steps, "hop_retarget", mult=mult,
+                             hop=self.base_hop * mult)
 
     def _retarget_hop(self, events: List[dict], woke: bool,
                       silent: bool = False) -> None:
@@ -1127,6 +1219,10 @@ class StreamServer:
             if self._vstate is not None:
                 self._vstate = vd.vad_reset_slot(self._vstate, s)
             init_mask[s] = True
+            if self._rec is not None:
+                self._rec.record(self._steps, "admit",
+                                 stream=rec.stream_id, slot=s,
+                                 internal=rec.internal)
 
         if self.batch_init:
             windows = np.zeros((self.slots, window), np.float32)
@@ -1144,18 +1240,23 @@ class StreamServer:
                 mask[s] = True
             mask_j = jnp.asarray(mask)
             t0 = time.perf_counter()
-            if self._cust_on:
-                logits, self._state = bundle["init_cust"](
-                    self._state, jnp.asarray(windows), jnp.asarray(keys),
-                    mask_j, *self._slot_custom_args())
-            else:
-                logits, self._state = bundle["init"](
-                    self._state, jnp.asarray(windows), jnp.asarray(keys),
-                    mask_j)
-            logits.block_until_ready()
+            with self._region("init"):
+                if self._cust_on:
+                    logits, self._state = bundle["init_cust"](
+                        self._state, jnp.asarray(windows),
+                        jnp.asarray(keys), mask_j,
+                        *self._slot_custom_args())
+                else:
+                    logits, self._state = bundle["init"](
+                        self._state, jnp.asarray(windows),
+                        jnp.asarray(keys), mask_j)
+                logits.block_until_ready()
             dt = time.perf_counter() - t0
             self._hop_wall_s += dt
             self._init_calls += 1
+            if self.trace is not None:
+                self.trace.span("init", t0, t0 + dt, tick=self._steps,
+                                slots=len(todo))
             for s, rec in todo:
                 _book(rec, s, windows[s], dt / len(todo))
                 init_logits[s] = np.asarray(logits[s])
@@ -1167,11 +1268,13 @@ class StreamServer:
             key = jax.random.fold_in(self._base_key, rec.uid)[None]
             t0 = time.perf_counter()
             d1 = self._row_custom(rec)
-            if d1 is not None:
-                logits, one = self.engine.init_custom(
-                    jnp.asarray(first[None]), key, *d1)
-            else:
-                logits, one = self.engine.init(jnp.asarray(first[None]), key)
+            with self._region("init"):
+                if d1 is not None:
+                    logits, one = self.engine.init_custom(
+                        jnp.asarray(first[None]), key, *d1)
+                else:
+                    logits, one = self.engine.init(jnp.asarray(first[None]),
+                                                   key)
             self._state = self._scatter(self._state, one, s)
             dt = time.perf_counter() - t0
             # the window-0 decision counts toward throughput, so its time
@@ -1188,6 +1291,10 @@ class StreamServer:
         speech-ready slot and ONE masked no-op fill over every gated slot,
         then the batched decision update.  Returns this tick's decision
         events (one per deciding stream; gated hops emit none)."""
+        tick = self._steps
+        t_tick = time.perf_counter()
+        if self._audit is not None:
+            self._audit.begin_tick(tick)
         self._check_profiles()
         if self._faults is not None:
             self._faults.tick()                 # advance offset drift
@@ -1269,13 +1376,15 @@ class StreamServer:
             a = np.zeros((self.slots, n * hop), np.float32)
             a[s] = np.concatenate(chunks)
             t0 = time.perf_counter()
-            if self._cust_on:
-                fn = self._replay_fn(bundle, n, cust=True)
-                lg, self._state = fn(self._state, jnp.asarray(a), mask_j,
-                                     *self._slot_custom_args())
-            else:
-                fn = self._replay_fn(bundle, n, cust=False)
-                lg, self._state = fn(self._state, jnp.asarray(a), mask_j)
+            with self._region("replay"):
+                if self._cust_on:
+                    fn = self._replay_fn(bundle, n, cust=True)
+                    lg, self._state = fn(self._state, jnp.asarray(a),
+                                         mask_j, *self._slot_custom_args())
+                else:
+                    fn = self._replay_fn(bundle, n, cust=False)
+                    lg, self._state = fn(self._state, jnp.asarray(a),
+                                         mask_j)
             self._replay_calls += 1
             outs = []
             for j in range(n):
@@ -1286,6 +1395,9 @@ class StreamServer:
             dt = time.perf_counter() - t0
             rec.wall_s += dt
             self._hop_wall_s += dt
+            if self.trace is not None:
+                self.trace.span("replay", t0, t0 + dt, tick=tick,
+                                stream=rec.stream_id, hops=n)
             for j, (ch, out) in enumerate(zip(chunks, outs)):
                 self._decisions += 1
                 self._speech_hops += 1
@@ -1304,19 +1416,22 @@ class StreamServer:
         if compute_mask.any():
             t0 = time.perf_counter()
             mask_j = jnp.asarray(compute_mask)
-            if self._cust_on:
-                hop_logits, self._state = bundle["hop_cust"](
-                    self._state, jnp.asarray(audio), mask_j,
-                    *self._slot_custom_args())
-            else:
-                hop_logits, self._state = bundle["hop"](self._state,
-                                                        jnp.asarray(audio),
-                                                        mask_j)
-            hop_logits.block_until_ready()
+            with self._region("hop"):
+                if self._cust_on:
+                    hop_logits, self._state = bundle["hop_cust"](
+                        self._state, jnp.asarray(audio), mask_j,
+                        *self._slot_custom_args())
+                else:
+                    hop_logits, self._state = bundle["hop"](
+                        self._state, jnp.asarray(audio), mask_j)
+                hop_logits.block_until_ready()
             dt = time.perf_counter() - t0
             self._hop_wall_s += dt
             self._hop_calls += 1
             n_active = int(compute_mask.sum())
+            if self.trace is not None:
+                self.trace.span("hop", t0, t0 + dt, tick=tick,
+                                slots=n_active)
             for s, rec in enumerate(self._slots):
                 if compute_mask[s]:
                     if rec.internal:
@@ -1333,25 +1448,35 @@ class StreamServer:
 
         if fill_mask.any():
             t0 = time.perf_counter()
-            if self._cust_on and self._slot_fills is not None:
-                self._state = bundle["gate_cust"](self._state,
-                                                  jnp.asarray(fill_mask),
-                                                  self._slot_fills)
-            else:
-                self._state = bundle["gate"](self._state,
-                                             jnp.asarray(fill_mask))
-            jax.block_until_ready(self._state)
-            self._hop_wall_s += time.perf_counter() - t0
+            with self._region("gate"):
+                if self._cust_on and self._slot_fills is not None:
+                    self._state = bundle["gate_cust"](
+                        self._state, jnp.asarray(fill_mask),
+                        self._slot_fills)
+                else:
+                    self._state = bundle["gate"](self._state,
+                                                 jnp.asarray(fill_mask))
+                jax.block_until_ready(self._state)
+            dt = time.perf_counter() - t0
+            self._hop_wall_s += dt
             self._gate_calls += 1
+            if self.trace is not None:
+                self.trace.span("gate", t0, t0 + dt, tick=tick,
+                                slots=int(fill_mask.sum()))
 
         internal = np.asarray([rec is not None and rec.internal
                                for rec in self._slots])
         decide_mask = (init_mask | compute_mask) & ~internal
         if bool(decide_mask.any()):
+            t0 = time.perf_counter()
             self._dstate, out = self._decide(self._dstate,
                                              jnp.asarray(logits),
                                              jnp.asarray(decide_mask))
             self._decisions += int(decide_mask.sum())
+            if self.trace is not None:
+                out.score.block_until_ready()
+                self.trace.span("decide", t0, time.perf_counter(),
+                                tick=tick, slots=int(decide_mask.sum()))
             trig = np.asarray(out.trigger)
             kwd = np.asarray(out.keyword)
             score = np.asarray(out.score)
@@ -1366,6 +1491,7 @@ class StreamServer:
                     rec.triggers.append(ev)
 
         # feature captures must see the post-hop states before slots retire
+        t_riders = time.perf_counter() if self.trace is not None else 0.0
         if self._cust is not None:
             self._cust.on_step(self)
         if self._health is not None:
@@ -1394,6 +1520,29 @@ class StreamServer:
         # recompensation (calibration layers, heal hot-swap)
         if self._health is not None:
             self._health.tick(self)
+
+        # -- per-tick telemetry (composition, analytical uJ, spans) --------
+        n_replay_hops = sum(len(chunks) for _, chunks in replays)
+        computed = (int(init_mask.sum()) + int(compute_mask.sum())
+                    + n_replay_hops)
+        gated = int(fill_mask.sum())
+        if self._rec is not None or self.trace is not None:
+            uj = self._tick_uj(computed, gated)
+            if self._rec is not None and (computed or gated or events):
+                self._rec.record(tick, "tick",
+                                 init=int(init_mask.sum()),
+                                 computed=computed, gated=gated,
+                                 replays=len(replays),
+                                 decisions=len(events), uj=round(uj, 4))
+                self._metrics.observe("serving.tick_uj", uj)
+            if self.trace is not None:
+                now = time.perf_counter()
+                self.trace.span("riders", t_riders, now, tick=tick)
+                self.trace.span("tick", t_tick, now, tick=tick,
+                                computed=computed, gated=gated,
+                                decisions=len(events), uj=round(uj, 4))
+        if self._audit is not None:
+            self._audit.end_tick()
         return events
 
     def drain(self, max_steps: int = 10_000) -> List[dict]:
@@ -1413,13 +1562,6 @@ class StreamServer:
 
     # -- crash-safe snapshots ------------------------------------------------
 
-    _COUNTERS = ("_steps", "_hop_wall_s", "_decisions", "_speech_hops",
-                 "_gated_hops", "_learn_hops", "_rejected", "_shed_events",
-                 "_shed_samples", "_calm_ticks", "_pressure_ticks",
-                 "_idle_ticks", "_hop_retargets", "_init_calls",
-                 "_hop_calls", "_replay_calls", "_gate_calls",
-                 "_profile_swaps")
-
     def snapshot(self, path: Optional[str] = None):
         """Serialize the complete serving state — slot carries and GAP
         rings, decision/VAD state, per-stream buffers and noise-field
@@ -1436,7 +1578,7 @@ class StreamServer:
         returned (useful for tests and warm standbys)."""
         arrays: Dict[str, np.ndarray] = {}
         spec = {
-            "version": 1,
+            "version": 2,
             "config": {"sample_len": self.cfg.sample_len,
                        "base_hop": self.base_hop,
                        "streaming": self.streaming,
@@ -1455,7 +1597,12 @@ class StreamServer:
             "queue": [rec.stream_id for rec in self._queue],
             "slot_ids": [None if rec is None else rec.stream_id
                          for rec in self._slots],
-            "counters": {k: getattr(self, k) for k in self._COUNTERS},
+            # v2: the whole metrics registry rides along — every counter
+            # (serving, health, customization) round-trips without a
+            # hand-maintained key list
+            "counters": self._metrics.snapshot(),
+            "recorder": (self._rec.snapshot()
+                         if self._rec is not None else None),
             "cust_on": self._cust_on,
             "heal": _snap_encode(self._heal_delta, arrays),
             "faults": _snap_encode(
@@ -1517,7 +1664,7 @@ class StreamServer:
                 arrays = {k: data[k] for k in data.files if k != "meta"}
         else:
             spec, arrays = snap["spec"], snap["arrays"]
-        if spec.get("version") != 1:
+        if spec.get("version") not in (1, 2):
             raise ValueError(f"unknown snapshot version: "
                              f"{spec.get('version')!r}")
         c = spec["config"]
@@ -1553,8 +1700,14 @@ class StreamServer:
                                         for sid in spec["queue"])
         self._slots = [None if sid is None else self._streams[sid]
                        for sid in spec["slot_ids"]]
-        for k, val in spec["counters"].items():
-            setattr(self, k, val)
+        counters = spec["counters"]
+        if spec["version"] >= 2:
+            self._metrics.restore(counters)
+        else:                       # v1: per-attribute dict; the setattrs
+            for k, val in counters.items():   # write through the registry
+                setattr(self, k, val)         # properties
+        if spec.get("recorder") is not None and self._rec is not None:
+            self._rec.restore(spec["recorder"])
         # riders rebuild from scratch at the restored slot count; per-slot
         # rows re-materialize deterministically from each stream's
         # ``custom`` dict, the chip-global row from heal + fault state
@@ -1662,6 +1815,13 @@ class StreamServer:
         }
         if self._cust is not None:
             out["customization"] = self._cust.stats()
+        out["obs"] = {"metrics": len(self._metrics._cells)}
+        if self._rec is not None:
+            out["obs"]["recorder"] = {"events": len(self._rec),
+                                      "capacity": self._rec.capacity,
+                                      "dropped": self._rec.dropped()}
+        if self._audit is not None:
+            out["obs"]["audit"] = self._audit.stats()
         if self._profiles is not None:
             out["profile_swaps"] = self._profile_swaps
         if self._faults is not None:
