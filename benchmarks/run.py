@@ -18,6 +18,14 @@ Run:  PYTHONPATH=src python -m benchmarks.run
            path on a --duty speech/silence mixture; writes decisions/sec,
            MACs and the duty-cycled uJ/decision to
            results/BENCH_streaming.json)
+      PYTHONPATH=src python -m benchmarks.run --streaming --devices 2
+          (adds the device-sharded serving section: the same total
+           stream load on one device vs a ShardedStreamServer of N
+           per-device slot pools, decisions/sec scaling from the max
+           per-device compute wall into the 'sharded' section of
+           BENCH_streaming.json; on CPU hosts the device count comes
+           from --xla_force_host_platform_device_count, set before jax
+           initializes; schema in docs/SHARDING.md)
       PYTHONPATH=src python -m benchmarks.run --customize --sessions 4
           (on-device customization as a serving workload: enrollment
            sessions driven through scheduler ticks — bias compensation +
@@ -449,7 +457,8 @@ def imc_fused_bench(out_path: str | None = None, sample_len: int = 16_000,
 
 def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
                     hop: int = 256, slots: int = 4, hops: int = 6,
-                    use_kernel: bool = True, duty: float = 0.2) -> dict:
+                    use_kernel: bool = True, duty: float = 0.2,
+                    devices: int = 1, shard_hop: int = 512) -> dict:
     """Always-on serving benchmark: ``slots`` concurrent streams batched
     through the StreamServer, frame-incremental (streaming) vs full-window
     recompute per hop, plus the voice-activity-gated path on a
@@ -462,7 +471,26 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
     Timing protocol: servers are stepped once past admission and once past
     the jit trace, then ``hops`` steady-state batched hops are timed; the
     gated run times the whole mixture drain instead (its per-step work is
-    intentionally non-uniform)."""
+    intentionally non-uniform).
+
+    With ``devices > 1`` (the ``--devices N`` flag; ``main()`` sets
+    ``--xla_force_host_platform_device_count`` before jax initializes) a
+    ``sharded`` section is appended: the SAME total stream load —
+    ``devices x slots`` streams at ``shard_hop`` — served by one
+    N-wide-slot single-device server vs a ``ShardedStreamServer`` of N
+    pools.  Both sides report the server-measured batched-compute wall
+    (``hop_wall_s``: block-until-ready around every fused launch); the
+    sharded side's headline wall is the MAX per-device wall, which is
+    what bounds a real fleet where devices compute concurrently — host
+    wall-clock is recorded alongside for honesty (on a single-core CI
+    host the pools necessarily run sequentially, so host wall shows no
+    speedup; the per-device walls are the hardware-truth quantity).
+    ``shard_hop`` defaults to 512 rather than inheriting ``hop``: the
+    section fixes TOTAL work while varying per-device batch, so it needs
+    a regime where per-launch cost scales with batch (at small hops the
+    CPU interpreter's fixed per-launch overhead dominates and batching
+    is nearly free — splitting such a load across devices measures
+    overhead, not compute)."""
     import jax
     import numpy as np_
     from repro.core import energy
@@ -548,9 +576,75 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
     macs_off = sum(s["macs"] for s in stats_off)
     macs_str = sum(s["macs"] for s in stats_str)
 
+    def run_sharded() -> dict:
+        """Fixed total load, one device vs N pools: device-parallel
+        decisions/sec from the max per-device compute wall."""
+        from repro.serving import ShardedStreamServer
+        total = devices * slots
+        s_total = sample_len + (hops + 2) * shard_hop
+        s_streams = {f"d{i}": rng.uniform(-1, 1, size=s_total)
+                     .astype(np_.float32) for i in range(total)}
+
+        def protocol(srv, submit, walls_of):
+            for sid, audio in s_streams.items():
+                submit(sid, audio)
+                srv.finish(sid)
+            srv.step()                     # admissions (window 0)
+            srv.step()                     # first hop: jit trace, untimed
+            base = walls_of()
+            t0 = time.perf_counter()
+            n = 0
+            for _ in range(hops):
+                n += len(srv.step())
+            host = time.perf_counter() - t0
+            assert n == total * hops, (n, total, hops)
+            walls = [w - b for w, b in zip(walls_of(), base)]
+            return n, host, walls
+
+        one = StreamServer(hw, cfg, hop=shard_hop, slots=total,
+                           use_kernel=use_kernel)
+        n1, host1, (wall1,) = protocol(one, one.submit,
+                                       lambda: [one._hop_wall_s])
+        sh = ShardedStreamServer(hw, cfg, hop=shard_hop, devices=devices,
+                                 slots=slots, use_kernel=use_kernel)
+        nN, hostN, wallsN = protocol(
+            sh, sh.submit, lambda: [p._hop_wall_s for p in sh.pools])
+        dev_wall = max(wallsN)
+        scaling = (nN / dev_wall) / (n1 / wall1)
+        return {
+            "devices": devices,
+            "backend_devices": len(jax.devices()),
+            "hop": shard_hop,
+            "slots_per_device": slots,
+            "streams": total,
+            "timed_hops": hops,
+            "metric": ("decisions/sec from the batched-compute wall "
+                       "(hop_wall_s); sharded uses max per-device wall "
+                       "= fleet throughput with devices computing "
+                       "concurrently; host_wall_s includes the "
+                       "sequential host dispatch"),
+            "single_device": {
+                "decisions": n1,
+                "compute_wall_s": round(wall1, 4),
+                "host_wall_s": round(host1, 4),
+                "decisions_per_sec": round(n1 / wall1, 2),
+            },
+            "sharded": {
+                "decisions": nN,
+                "per_device_wall_s": [round(w, 4) for w in wallsN],
+                "max_device_wall_s": round(dev_wall, 4),
+                "host_wall_s": round(hostN, 4),
+                "decisions_per_sec": round(nN / dev_wall, 2),
+            },
+            "scaling_decisions_per_sec": round(scaling, 3),
+            "regen": ("PYTHONPATH=src python -m benchmarks.run "
+                      f"--streaming --devices {devices}"),
+        }
+
     res_stream = run(streaming=True)
     res_recomp = run(streaming=False)
     res_gated = run_gated()
+    res_sharded = run_sharded() if devices > 1 else None
     # charge the energy at the duty cycle the run actually measured (the
     # VAD's hangover/EMA tail makes it slightly above the target), so the
     # recorded reduction describes the attached run
@@ -589,6 +683,13 @@ def streaming_bench(out_path: str | None = None, sample_len: int = 2_000,
                 stats_off, stats_str).items()
         },
     }
+    if res_sharded is not None:
+        report["sharded"] = res_sharded
+        _row("sharded_scaling_decisions_per_sec", "",
+             f"x{res_sharded['scaling_decisions_per_sec']:.2f}"
+             f"@{devices}dev;"
+             f"single={res_sharded['single_device']['decisions_per_sec']};"
+             f"sharded={res_sharded['sharded']['decisions_per_sec']}")
     _row("streaming_decisions_per_sec",
          f"{res_stream['us_per_decision']:.0f}",
          f"recompute_us={res_recomp['us_per_decision']:.0f};"
@@ -1355,6 +1456,14 @@ def main(argv=None) -> None:
     ap.add_argument("--duty", type=float, default=0.2,
                     help="--streaming speech duty cycle of the gated "
                          "mixture (default 0.2)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="--streaming: also run the sharded serving "
+                         "section — the same total stream load on one "
+                         "device vs a ShardedStreamServer of N per-device "
+                         "pools — and record decisions/sec scaling into "
+                         "the BENCH_streaming.json 'sharded' section "
+                         "(sets --xla_force_host_platform_device_count "
+                         "on CPU hosts; real devices used when present)")
     ap.add_argument("--customize", action="store_true",
                     help="run the enrollment-session customization "
                          "benchmark (utterances-to-recovered-accuracy + "
@@ -1413,9 +1522,19 @@ def main(argv=None) -> None:
     if not args.streaming and (args.streaming_out is not None
                                or args.hop != 256 or args.stream_slots != 4
                                or args.stream_hops != 6
-                               or args.duty != 0.2):
+                               or args.duty != 0.2 or args.devices != 1):
         ap.error("--streaming-out/--hop/--stream-slots/--stream-hops/"
-                 "--duty only apply with --streaming")
+                 "--duty/--devices only apply with --streaming")
+    if args.devices < 1:
+        ap.error("--devices must be >= 1")
+    if args.devices > 1:
+        # must land before the first jax import anywhere in the process:
+        # the host-platform device count locks on backend initialization
+        # (harmless on real multi-device backends — jax ignores the flag
+        # off-CPU; appended last so it wins over an inherited setting)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
     if not args.customize and (args.customize_out is not None
                                or args.customize_epochs != 120
                                or args.sessions != 4):
@@ -1450,7 +1569,8 @@ def main(argv=None) -> None:
         streaming_bench(args.streaming_out,
                         sample_len=args.sample_len or 2_000,
                         hop=args.hop, slots=args.stream_slots,
-                        hops=args.stream_hops, duty=args.duty)
+                        hops=args.stream_hops, duty=args.duty,
+                        devices=args.devices)
         dump_trace()
         return
     if args.customize:

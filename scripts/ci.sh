@@ -8,8 +8,11 @@
 #                            (incl. the VAD-gating equivalence + wake-margin
 #                            replay gates), the customization gates, the
 #                            observability gate (telemetry bit-identity +
-#                            auditor-in-raise-mode equivalence slice), then
-#                            the docs check
+#                            auditor-in-raise-mode equivalence slice), the
+#                            sharding gate (sharded == single-device
+#                            bit-identity on 2 host-platform devices +
+#                            the --devices 2 bench smoke), then the docs
+#                            check
 #   scripts/ci.sh --full     the whole suite (tier-1 command verbatim)
 #                            plus the docs check
 #
@@ -69,4 +72,18 @@ python -m pytest -x -q -m "streaming and not slow" tests/test_reliability.py
 python -m pytest -x -q tests/test_obs.py
 REPRO_OBS_AUDIT=raise python -m pytest -x -q tests/test_serving.py \
     -k "gated_forced_speech_bitexact or wake_margin_replays"
+# sharding gate (docs/SHARDING.md): the sharded-equivalence contract —
+# a ShardedStreamServer (per-device slot pools behind the placement
+# router) is bit-identical per stream to single-device serving, noise /
+# chip offsets / faults / gating / snapshot bundles included, and the
+# one-launch-per-layer audit holds PER DEVICE — run under a forced
+# 2-device host platform so placement exercises real device boundaries,
+# then the --devices 2 bench smoke (scaling section machinery end to
+# end; the committed artifact's full regen command is in docs/SHARDING.md)
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_sharded_serving.py -m "not slow"
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
+    python -m pytest -x -q tests/test_obs.py -k "device or sharded"
+python -m benchmarks.run --streaming --devices 2 --stream-hops 2 \
+    --streaming-out "$(mktemp -d)/BENCH_streaming.json" > /dev/null
 python scripts/check_docs.py

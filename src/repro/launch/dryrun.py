@@ -7,7 +7,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_BASE_XLA_FLAGS", "")
 """Multi-pod dry-run (deliverable e).
 
 For every (architecture x input shape) cell, build the production mesh,
-shard parameters/optimizer/batch per repro.sharding.policy, and prove the
+shard parameters/optimizer/batch per repro.launch.mesh_policy, and prove the
 distributed program is coherent:
 
     jax.jit(step, in_shardings=...).lower(**specs).compile()
@@ -51,7 +51,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                                     cache_specs, input_specs,
                                     make_decode_step, make_prefill_step,
                                     make_train_step)
-    from repro.sharding.policy import MeshPolicy
+    from repro.launch.mesh_policy import MeshPolicy
 
     cfg = get_config(arch)
     if opt_overrides:

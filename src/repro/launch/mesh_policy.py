@@ -1,4 +1,13 @@
-"""Per-architecture PartitionSpec policy for the production mesh.
+"""Per-architecture PartitionSpec policy for the LM production mesh.
+
+Quarantined here from ``repro.sharding`` (which now holds the *serving*
+placement machinery — see repro.sharding.placement and
+repro.serving.shard): these tensor-layout rules are specific to the LM
+training/decoding stack under ``repro.launch`` and are consumed only by
+the dry-run driver and the distribution tests.  The KWS serving tier
+shards by *stream placement* (whole streams pinned to per-device slot
+pools), not by tensor partitioning, so none of these PartitionSpec rules
+apply there.
 
 Layout (DESIGN.md §5):
   * batch over ("pod","data") — DP across pods, plain DP within pod;

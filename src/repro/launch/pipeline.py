@@ -7,8 +7,9 @@ layers are split into S stages along a `pipe` mesh axis; microbatches
 stream through stages via `jax.lax.ppermute` inside shard_map, giving the
 classic GPipe schedule (S + M - 1 ticks for M microbatches).
 
-Tested in tests/test_pipeline.py on a host-platform mesh; compose with the
-policy module by adding a "pipe" axis to the mesh and passing
+Quarantined under ``repro.launch`` with the rest of the LM stack (it was
+written for the LM mesh, not the KWS serving tier); compose with
+repro.launch.mesh_policy by adding a "pipe" axis to the mesh and passing
 stage-sharded stacked params.
 """
 

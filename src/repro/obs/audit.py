@@ -59,7 +59,7 @@ class LaunchAuditError(RuntimeError):
 
 class LaunchAuditor:
     def __init__(self, imc_layers, mode="flag", batch_init=True,
-                 history=256):
+                 history=256, device=None):
         if mode not in AUDIT_MODES:
             raise ValueError(f"audit mode must be one of {AUDIT_MODES}, "
                              f"got {mode!r}")
@@ -67,6 +67,11 @@ class LaunchAuditor:
             raise ValueError("imc_layers must be >= 1")
         self.imc_layers = int(imc_layers)
         self.mode = mode
+        # in a sharded deployment the one-launch-per-layer contract is
+        # per-device: each device pool owns its own auditor, and every
+        # violation / stats dict carries the device label so fleet
+        # rollups attribute launches to the pool that issued them
+        self.device = device
         self.batch_init = bool(batch_init)
         self.violations = []
         self._ticks = 0
@@ -148,10 +153,14 @@ class LaunchAuditor:
 
     def _violate(self, cause, detail):
         violation = {"tick": self._tick, "cause": cause, "detail": detail}
+        if self.device is not None:
+            violation["device"] = self.device
         self.violations.append(violation)
         if self.mode == "raise":
+            where = (f" [device {self.device}]"
+                     if self.device is not None else "")
             raise LaunchAuditError(
-                f"tick {self._tick}: [{cause}] {detail}")
+                f"tick {self._tick}{where}: [{cause}] {detail}")
 
     # -- reporting --------------------------------------------------------
 
@@ -160,6 +169,11 @@ class LaunchAuditor:
         return list(self._history)
 
     def stats(self):
+        if self.device is not None:
+            return dict(self._stats_base(), device=self.device)
+        return self._stats_base()
+
+    def _stats_base(self):
         return {
             "mode": self.mode,
             "imc_layers": self.imc_layers,

@@ -3,7 +3,7 @@
 Implemented from scratch (the container is offline): Adam(W), SGD+momentum,
 cosine and step-decay schedules, global-norm clipping.  All states are
 pytrees so they shard/checkpoint exactly like parameters (FSDP shards the
-Adam moments over the `data` axis — see repro.sharding.policy).
+Adam moments over the `data` axis — see repro.launch.mesh_policy).
 """
 
 from __future__ import annotations

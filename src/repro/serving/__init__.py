@@ -18,6 +18,11 @@ layer with dynamic hop widening and admission control.
   scheduler.py  — StreamServer: slots, admission queue + backpressure,
                   batched hops, VAD gating + wake replay, dynamic hop,
                   slot autoscaling, eviction, latency/throughput stats
+  shard.py      — ShardedStreamServer: N per-device slot pools (one
+                  StreamServer per device) behind a deterministic
+                  host-side placement router (repro.sharding); global
+                  uid assignment keeps sharded serving bit-identical to
+                  single-device per stream
   customize.py  — on-device customization as a serving workload:
                   enrollment sessions, scheduler-ticked bias compensation
                   + SGA fine-tuning, hot-swapped per-stream profiles
@@ -54,6 +59,7 @@ from repro.serving.decision import (DecisionConfig, DecisionOut,
                                     decision_step)
 from repro.serving.scheduler import (AdmissionConfig, DynamicHopConfig,
                                      StreamServer)
+from repro.serving.shard import ShardedStreamServer
 from repro.serving.stream import (StreamEngine, StreamGeometry, StreamState,
                                   gated_step, gated_window_step,
                                   hop_alignment, hop_sa_noise_fields,
@@ -70,7 +76,8 @@ __all__ = [
     "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
     "DynamicHopConfig", "FaultConfig", "FaultModel", "FlightRecorder",
     "HealthConfig", "HealthMonitor", "LaunchAuditError", "LaunchAuditor",
-    "MetricsRegistry", "ObsConfig", "SANoiseField", "StreamServer",
+    "MetricsRegistry", "ObsConfig", "SANoiseField", "ShardedStreamServer",
+    "StreamServer",
     "StreamEngine", "StreamGeometry", "StreamState", "TraceBuilder",
     "VADConfig", "VADState", "decision_init",
     "decision_step", "frame_energy_db", "gated_step", "gated_window_step",

@@ -367,16 +367,22 @@ class StreamServer:
                  faults=None, health=None, profiles=None,
                  silence_fill: str = "constant",
                  obs: Optional[ObsConfig] = None,
+                 device_label: Optional[int] = None,
                  seed: int = 0):
         # the registry backs every counter attribute — create it before
         # the first counter write below
         self._metrics = MetricsRegistry()
         self.obs = obs if obs is not None else ObsConfig.from_env()
+        # ``device_label`` names this server's device pool in a sharded
+        # deployment (repro.serving.shard): the launch auditor and fleet
+        # stats rollups attribute per-device launches through it
+        self.device_label = device_label
         self._rec = (FlightRecorder(self.obs.recorder)
                      if self.obs.recorder else None)
         self._audit = (LaunchAuditor(cfg.num_conv_layers - 1,
                                      mode=self.obs.audit,
-                                     batch_init=batch_init)
+                                     batch_init=batch_init,
+                                     device=device_label)
                        if self.obs.audit != "off" else None)
         self.trace = TraceBuilder() if self.obs.trace else None
         self._uj_consts: Dict[int, tuple] = {}   # mult -> (speech, gated)
@@ -862,7 +868,8 @@ class StreamServer:
     # -- stream lifecycle ---------------------------------------------------
 
     def submit(self, stream_id: str, chunk: np.ndarray,
-               user_id: Optional[str] = None) -> str:
+               user_id: Optional[str] = None,
+               uid: Optional[int] = None) -> str:
         """Append audio to a stream (created on first submit).  Returns the
         stream's placement: 'slot' (live), 'queued' (awaiting a slot) or
         'rejected' (admission queue full — nothing was buffered; the
@@ -872,7 +879,16 @@ class StreamServer:
         stream with a profile-store user: their stored customization is
         auto-installed onto whichever slot the stream lands on, and the
         per-tick staleness sweep re-installs it if the store's copy
-        changes (or resets to base if it is deleted)."""
+        changes (or resets to base if it is deleted).
+
+        ``uid`` pins the stream's noise-field identity instead of drawing
+        from this server's counter — the sharded router
+        (repro.serving.shard) assigns GLOBAL uids in submission order so
+        a stream's per-absolute-column SA-noise field is the same no
+        matter which device pool it lands on (and identical to what a
+        single-device server would have drawn).  The local counter jumps
+        past any pinned uid so internally spawned streams (canaries,
+        session replays) never collide with routed ones."""
         rec = self._streams.get(stream_id)
         if rec is None:
             if (self.acfg is not None and self.acfg.max_queue is not None
@@ -883,9 +899,11 @@ class StreamServer:
                     self._rec.record(self._steps, "reject",
                                      stream=stream_id)
                 return "rejected"
-            rec = _Stream(stream_id=stream_id, uid=self._uid,
+            rec = _Stream(stream_id=stream_id,
+                          uid=self._uid if uid is None else int(uid),
                           buf=np.zeros((0,), np.float32))
-            self._uid += 1
+            self._uid = (self._uid + 1 if uid is None
+                         else max(self._uid, int(uid) + 1))
             self._streams[stream_id] = rec
             self._queue.append(rec)
             self._try_admit()

@@ -1,3 +1,15 @@
-from repro.sharding.policy import MeshPolicy
+"""Serving-tier sharding: deterministic stream placement across devices.
 
-__all__ = ["MeshPolicy"]
+This package exports exactly what the sharded serving tier uses — the
+placement policy consulted by ``repro.serving.shard.ShardedStreamServer``
+when a new stream needs a device.  The LM-training PartitionSpec rules
+that used to live here (``repro.sharding.policy``) were quarantined to
+``repro.launch.mesh_policy``: they shard *tensors* across a training
+mesh, while the KWS serving tier shards *streams* across per-device slot
+pools and never moves tensors between devices at all.
+"""
+
+from repro.sharding.placement import (PlacementConfig, PlacementPolicy,
+                                      PoolLoad, STRATEGIES)
+
+__all__ = ["PlacementConfig", "PlacementPolicy", "PoolLoad", "STRATEGIES"]

@@ -1,0 +1,110 @@
+"""Stream placement policy for the device-sharded serving tier.
+
+The KWS accelerator shards by *streams*, not tensors: every device runs a
+complete slot-pool engine (``repro.serving.scheduler.StreamServer``) over
+its own folded copy of the model, and the only cross-device decision is
+WHERE a new stream lands.  That decision is this module: a small,
+deterministic, host-side policy the router
+(``repro.serving.shard.ShardedStreamServer``) consults once per new
+stream — there is no per-hop cross-device traffic at all.
+
+Determinism is load-bearing (the sharded==single-device equivalence
+tests replay placements): given identical load views the policy always
+picks the same device, and every tie is broken by a rotating round-robin
+cursor rather than dict order or hashing.
+
+Strategies:
+
+* ``least_loaded`` (default) — most free slots first, then shortest
+  admission queue, then (optionally) lowest recent speech duty so an
+  all-silent pool absorbs new talkers before a busy one, then the
+  round-robin cursor.
+* ``round_robin`` — ignore load, rotate.  Useful as the degenerate
+  baseline in placement tests.
+
+This replaces the LM-era ``repro.sharding.policy`` PartitionSpec rules,
+which were quarantined to ``repro.launch.mesh_policy`` (they shard
+tensors across a training mesh; serving pins whole streams to devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+__all__ = ["PlacementConfig", "PlacementPolicy", "PoolLoad", "STRATEGIES"]
+
+STRATEGIES = ("least_loaded", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolLoad:
+    """One device pool's load view, as sampled by the router at
+    placement time.  ``duty`` is the pool's recent speech duty cycle in
+    [0, 1] (None when the pool has not computed any hops yet)."""
+    free_slots: int
+    queue_depth: int
+    duty: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    strategy: str = "least_loaded"
+    # tie-break equally-free pools on recent speech duty (quietest pool
+    # wins): balances *compute*, not just slot occupancy, when VAD gating
+    # makes slot counts a poor proxy for work
+    duty_aware: bool = False
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(f"placement strategy must be one of "
+                             f"{STRATEGIES}, got {self.strategy!r}")
+
+
+class PlacementPolicy:
+    """Deterministic stream->device chooser over ``n_devices`` pools."""
+
+    def __init__(self, n_devices: int,
+                 cfg: Optional[PlacementConfig] = None):
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        self.n_devices = int(n_devices)
+        self.cfg = cfg if cfg is not None else PlacementConfig()
+        self._rr = 0          # rotating tie-break cursor
+
+    def place(self, loads: Sequence[PoolLoad]) -> int:
+        """Pick the device index for one new stream.  ``loads`` must have
+        one entry per device, in device order."""
+        if len(loads) != self.n_devices:
+            raise ValueError(f"expected {self.n_devices} load entries, "
+                             f"got {len(loads)}")
+        if self.cfg.strategy == "round_robin":
+            d = self._rr % self.n_devices
+            self._rr += 1
+            return d
+
+        def key(d: int):
+            ld = loads[d]
+            duty = (ld.duty if (self.cfg.duty_aware
+                                and ld.duty is not None) else 0.0)
+            # most free slots, then shortest queue, then quietest pool,
+            # then closest-after-the-cursor (rotates across exact ties)
+            return (-ld.free_slots, ld.queue_depth, duty,
+                    (d - self._rr) % self.n_devices)
+
+        d = min(range(self.n_devices), key=key)
+        self._rr = (d + 1) % self.n_devices
+        return d
+
+    # -- snapshot support (rides the sharded snapshot bundle) -------------
+
+    def snapshot(self) -> dict:
+        return {"strategy": self.cfg.strategy,
+                "duty_aware": self.cfg.duty_aware, "rr": self._rr}
+
+    def restore(self, snap: dict) -> None:
+        if snap["strategy"] != self.cfg.strategy:
+            raise ValueError(f"placement strategy mismatch: snapshot has "
+                             f"{snap['strategy']!r}, policy is "
+                             f"{self.cfg.strategy!r}")
+        self._rr = int(snap["rr"])

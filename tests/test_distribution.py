@@ -35,7 +35,7 @@ def test_sharded_train_step_runs_on_debug_mesh():
         from repro.launch.mesh import make_debug_mesh
         from repro.launch.steps import (init_params_for, make_optimizer,
                                         make_train_step)
-        from repro.sharding.policy import MeshPolicy
+        from repro.launch.mesh_policy import MeshPolicy
 
         cfg = get_config("qwen2.5-14b").reduced()
         mesh = make_debug_mesh(2, 4)

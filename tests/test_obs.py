@@ -319,6 +319,27 @@ def test_auditor_gate_and_overtrace_rules():
             pass
 
 
+def test_auditor_device_label_attribution():
+    """Sharded pools label their auditors: the device rides every
+    violation dict, the raise message, and stats() — so fleet rollups
+    can attribute a broken launch contract to the pool that broke it."""
+    aud = LaunchAuditor(imc_layers=5, mode="flag", device=1)
+    aud.begin_tick(0)
+    with aud.region("hop"):
+        pass
+    with aud.region("hop"):
+        pass
+    aud.end_tick()
+    assert aud.violations[0]["device"] == 1
+    assert aud.stats()["device"] == 1
+    aud = LaunchAuditor(imc_layers=5, mode="raise", device=3)
+    aud.begin_tick(0)
+    with pytest.raises(LaunchAuditError, match=r"device 3"):
+        aud._on_call("gate", traced=1)
+    # unlabeled auditors keep the historical stats shape
+    assert "device" not in LaunchAuditor(imc_layers=5).stats()
+
+
 def test_auditor_history_attribution():
     aud = LaunchAuditor(imc_layers=5, mode="flag", history=2)
     for tick in range(3):
@@ -506,6 +527,58 @@ def test_trace_export_and_prometheus_render(folded, tmp_path):
     text = srv.metrics.prometheus_text()
     assert 'serving_batched_calls{cause="hop"}' in text
     assert "serving_tick_uj_count" in text
+
+
+@pytest.mark.streaming
+def test_sharded_per_device_one_launch_audit(folded, monkeypatch):
+    """The one-launch-per-layer contract is PER DEVICE under sharding:
+    with inference, canary health windows and an enrollment session's
+    learning hops mixed across 2 device pools, every pool's auditor
+    (armed via ``REPRO_OBS_AUDIT=raise``) sees at most one batched hop
+    per tick, zero traced kernels on gate fills, and zero violations —
+    and each auditor carries its pool's device label."""
+    from repro.core.onchip_training import OnChipTrainConfig
+    from repro.serving import (CustomizeConfig, HealthConfig,
+                               ShardedStreamServer)
+
+    monkeypatch.setenv("REPRO_OBS_AUDIT", "raise")
+    rng = np.random.default_rng(21)
+    sh = ShardedStreamServer(folded, CFG, devices=2, slots=3, hop=HOP,
+                             use_kernel=True, vad=_VAD, seed=3,
+                             health=HealthConfig(interval=4))
+    sess = sh.customize("u0", CustomizeConfig(
+        train=OnChipTrainConfig(epochs=8, fixed_error_scale=1.375),
+        epochs_per_tick=4, layers_per_tick=5))
+    for c in range(2):
+        sess.enroll(c, rng.uniform(-1, 1, L).astype(np.float32))
+    sess.finish_enrollment()
+    for i in range(3):                      # live gated traffic, both pools
+        sh.submit(f"live{i}", _gated_wav(rng))
+        sh.finish(f"live{i}")
+    events = sh.drain()
+    steps = 0
+    while not sess.done and steps < 500:
+        sh.step()
+        steps += 1
+    assert sess.done and len(events) > 0
+    assert {sh.where(f"live{i}") for i in range(3)} == {0, 1}
+    st = sh.stats()
+    assert st["audit"]["violations"] == 0
+    for d, srv in enumerate(sh.pools):
+        s = srv.auditor.stats()
+        assert s["device"] == d
+        assert s["mode"] == "raise"          # the env arming reached it
+        assert s["violations"] == 0
+        assert s["max_hop_calls_per_tick"] <= 1
+        assert s["calls"]["hop"] > 0         # every pool actually computed
+        assert s["traced_launches"] > 0      # fresh pallas traces counted
+        for h in srv.auditor.history():
+            assert h["launches_per_layer"] <= 3   # init+hop+replay bound
+    # gate fills ran somewhere in the fleet and traced nothing (a traced
+    # gate would have raised above)
+    assert sum(p.auditor.stats()["calls"]["gate"] for p in sh.pools) > 0
+    learn = sum(p.stats()["learn_hops"] for p in sh.pools)
+    assert learn > 0                         # learning rode the batches
 
 
 def test_trace_builder_relative_timestamps():

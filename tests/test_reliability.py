@@ -619,3 +619,95 @@ def test_soak_quick(folded):
 def test_soak_long(folded, seed):
     st = _soak(folded, seed=seed, ticks=120, snapshot_every=25)
     assert st["health"]["canaries"] >= 3
+
+
+# ---------------------------------------------------------------------------
+# Sharded soak: the same chaos across a 2-device fleet
+# ---------------------------------------------------------------------------
+
+
+def _sharded_soak(folded, seed, ticks, snapshot_every):
+    """The PR-6 soak across a 2-device fleet: random admissions (beyond
+    per-pool capacity, so placement + queueing engage), evictions that
+    free capacity for later streams to land on either device
+    (cross-device re-routing), fleet-wide fault campaigns with per-pool
+    canary heals, and periodic sharded snapshot -> restore-into-fresh-
+    fleet swaps.  Invariants checked every tick; returns fleet stats."""
+    hw = folded
+    chip = _chip()
+    from repro.serving import ShardedStreamServer
+
+    def mk():
+        return ShardedStreamServer(
+            hw, CFG, devices=2, slots=2, hop=HOP, use_kernel=False,
+            chip_offsets=chip, sa_noise_std=1.0, vad=VADConfig(),
+            faults=flt.FaultConfig(drift_std=0.1, seed=seed),
+            health=HealthConfig(interval=5), seed=seed)
+
+    rng = np.random.default_rng(seed)
+    sh = mk()
+    alive = {}
+    placed_on = set()
+    for t in range(ticks):
+        r = rng.random()
+        if r < 0.3 and len(alive) < 6:
+            sid = f"s{t}"
+            alive[sid] = True
+            sh.submit(sid, rng.uniform(-1, 1, L).astype(np.float32))
+            placed_on.add(sh.where(sid))
+        elif r < 0.4 and alive:
+            sid = rng.choice(sorted(alive))
+            del alive[sid]
+            sh.evict(sid)
+        elif r < 0.5:
+            kind = rng.integers(3)
+            for fm in sh.fault_models:      # fleet-wide campaign: every
+                if kind == 0:               # pool mutates identically
+                    fm.inject_bit_flips(n=1)
+                elif kind == 1:
+                    fm.inject_stuck("conv2", [3])
+                else:
+                    fm.clear()
+        for sid in list(alive):
+            amp = 1.0 if rng.random() < 0.5 else 1e-4
+            sh.submit(sid, (amp * rng.standard_normal(HOP))
+                      .astype(np.float32))
+        events = sh.step()
+        for ev in events:                   # device tags track placement
+            assert ev["device"] == sh.where(ev["stream"])
+        if (t + 1) % snapshot_every == 0:
+            snap = sh.snapshot()
+            sh2 = mk()
+            sh2.restore(snap)
+            for a, b in zip(sh2.pools, sh.pools):
+                assert a.health.stats() == b.health.stats()
+                assert a.faults.stats() == b.faults.stats()
+            assert sh2._where == sh._where
+            sh = sh2                        # continue on the restored fleet
+        for srv in sh.pools:
+            assert srv.health.state in srv.health.STATES
+        live = [rec.stream_id for srv in sh.pools for rec in srv._slots
+                if rec is not None and not rec.internal]
+        assert len(live) == len(set(live))  # no stream on two devices
+        for sid in live:
+            assert sh.where(sid) is not None
+    assert placed_on == {0, 1}              # both devices took streams
+    st = sh.stats()
+    assert st["steps"] == ticks
+    return st
+
+
+@pytest.mark.streaming
+def test_sharded_soak_quick(folded):
+    st = _sharded_soak(folded, seed=17, ticks=24, snapshot_every=8)
+    assert sum(d["health"]["canaries"]
+               for d in st["per_device"]) >= 2    # >=1 canary per pool
+
+
+@pytest.mark.slow
+@pytest.mark.streaming
+@pytest.mark.parametrize("seed", [303, 404])
+def test_sharded_soak_long(folded, seed):
+    st = _sharded_soak(folded, seed=seed, ticks=120, snapshot_every=25)
+    assert sum(d["health"]["canaries"]
+               for d in st["per_device"]) >= 6
