@@ -86,4 +86,20 @@ XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=2" \
     python -m pytest -x -q tests/test_obs.py -k "device or sharded"
 python -m benchmarks.run --streaming --devices 2 --stream-hops 2 \
     --streaming-out "$(mktemp -d)/BENCH_streaming.json" > /dev/null
+# compiled-tick gate (docs/SERVING.md): the whole-tick fast path is
+# bit-identical to the interpreted tick — a quick differential slice
+# (gated + noise/chip configs, single-tick block routing, the byte-pinned
+# golden decision trace), the auditor's compiled-cause rules with
+# REPRO_OBS_AUDIT=raise armed through the environment, then the
+# --streaming --compiled bench smoke (in-bench event-identity assert +
+# raise-mode audit; the committed artifact's full regen command is in
+# docs/SERVING.md).  The full differential matrix (faults, dynamic hop,
+# autoscale, sharded, soak) runs under `-m compiled` in the full suite.
+python -m pytest -x -q tests/test_compiled.py \
+    -k "(block_bitident and (gated_clean or noise_and_chip)) \
+        or routes_single_tick or golden_decision_trace \
+        or auditor_compiled_cause_rules or audit_raise_clean_env"
+python -m benchmarks.run --streaming --compiled --compiled-ticks 8 \
+    --compiled-block 4 --stream-hops 2 \
+    --streaming-out "$(mktemp -d)/BENCH_streaming.json" > /dev/null
 python scripts/check_docs.py

@@ -24,6 +24,12 @@ evaluates the same field reproduces the streaming output bit-exactly.
 ``sa_key``/``sa_noise_std`` is the alternative fresh-draw form used by the
 non-streaming forward; the two are mutually exclusive.
 
+Both fused entries are shape-stable jit-pure functions, so they compose
+under ``lax.scan``: the compiled whole-tick block (repro.serving.compiled)
+traces ``fused_conv_mav_step`` once per layer inside its scan body and the
+runtime re-issues that single launch per fused tick — the
+one-launch-per-layer invariant carries into the K-tick fast path for free.
+
 The per-group ``conv_mav`` loop below is kept as the seed baseline the
 fused kernel is benchmarked against (benchmarks/run.py::imc_fused_bench).
 """

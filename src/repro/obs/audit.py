@@ -29,8 +29,14 @@ Per-tick rules (checked in :meth:`end_tick`):
 * at most one ``init`` wave when the server batches admissions
   (``batch_init=True``; unbatched servers legitimately issue one B=1 init
   call per admission);
+* at most one ``compiled`` whole-tick block, and never alongside
+  interpreted calls in the same tick — the block IS the tick's entire
+  compute (a K-tick block attributes to its first tick; the remaining
+  K-1 ticks legitimately show zero calls);
 * no region traces more than ``imc_layers`` fresh launches (``gate``
-  traces zero).
+  traces zero; a ``compiled`` region's scanned body contains exactly one
+  batched step, so its trace is bounded exactly like a ``hop``'s — the
+  scan re-issues it per step at run time, which is the point).
 
 ``mode`` selects what a violation does: ``"flag"`` appends to
 :attr:`violations` (and the server surfaces them through ``stats()``),
@@ -51,6 +57,14 @@ AUDIT_MODES = ("off", "flag", "raise")
 
 # causes whose region launches fused kernels (a gate region launches none)
 _COMPUTE_CAUSES = ("init", "hop", "replay")
+# a compiled whole-tick block (repro.serving.compiled) also launches
+# fused kernels — at most ``imc_layers`` on a fresh trace, because the
+# scanned body contains exactly one stream_step: the scan re-issues it
+# per step at RUN time, but the auditor sees the trace, where
+# one-launch-per-layer is structural.  It is accounted separately from
+# _COMPUTE_CAUSES because its per-tick rule differs: the block IS the
+# tick's entire compute, so it must be the only call in its tick.
+_LAUNCH_CAUSES = _COMPUTE_CAUSES + ("compiled",)
 
 
 class LaunchAuditError(RuntimeError):
@@ -75,7 +89,7 @@ class LaunchAuditor:
         self.batch_init = bool(batch_init)
         self.violations = []
         self._ticks = 0
-        self._calls = {c: 0 for c in _COMPUTE_CAUSES + ("gate",)}
+        self._calls = {c: 0 for c in _LAUNCH_CAUSES + ("gate",)}
         self._traced = 0
         self._tick = None
         self._tick_calls = None
@@ -91,7 +105,7 @@ class LaunchAuditor:
     def end_tick(self):
         if self._tick is None:
             return
-        counts = {c: 0 for c in _COMPUTE_CAUSES + ("gate",)}
+        counts = {c: 0 for c in _LAUNCH_CAUSES + ("gate",)}
         for call in self._tick_calls:
             counts[call["cause"]] += 1
         if counts["hop"] > 1:
@@ -103,7 +117,17 @@ class LaunchAuditor:
         if self.batch_init and counts["init"] > 1:
             self._violate("init", f"{counts['init']} init waves in one "
                           f"batched-admission tick (max 1)")
-        launches = sum(counts[c] for c in _COMPUTE_CAUSES) * self.imc_layers
+        if counts["compiled"] > 1:
+            self._violate("compiled", f"{counts['compiled']} compiled "
+                          f"blocks in one tick (max 1)")
+        if counts["compiled"] and any(counts[c] for c in
+                                      ("init", "hop", "replay", "gate")):
+            others = {c: counts[c] for c in ("init", "hop", "replay",
+                                             "gate") if counts[c]}
+            self._violate("compiled", f"compiled block co-issued with "
+                          f"interpreted calls {others} in one tick (the "
+                          f"block must be the tick's entire compute)")
+        launches = sum(counts[c] for c in _LAUNCH_CAUSES) * self.imc_layers
         self._history.append({"tick": self._tick, "calls": counts,
                               "launches": launches,
                               "launches_per_layer":
@@ -141,7 +165,7 @@ class LaunchAuditor:
             self._tick_calls.append(
                 {"cause": cause, "traced": traced,
                  "launches": (self.imc_layers
-                              if cause in _COMPUTE_CAUSES else 0)})
+                              if cause in _LAUNCH_CAUSES else 0)})
         if cause == "gate":
             if traced:
                 self._violate(cause, f"gate fill traced {traced} pallas "

@@ -18,6 +18,11 @@ layer with dynamic hop widening and admission control.
   scheduler.py  — StreamServer: slots, admission queue + backpressure,
                   batched hops, VAD gating + wake replay, dynamic hop,
                   slot autoscaling, eviction, latency/throughput stats
+  compiled.py   — whole-tick compiled fast path: K steady-state ticks
+                  (VAD gate -> batched hop -> decision -> rider updates)
+                  fused into one jitted lax.scan dispatch, bit-identical
+                  to K interpreted ticks; structural events break out
+                  to the Python tick
   shard.py      — ShardedStreamServer: N per-device slot pools (one
                   StreamServer per device) behind a deterministic
                   host-side placement router (repro.sharding); global
@@ -49,6 +54,7 @@ after a restart.
 
 from repro.core.faults import FaultConfig, FaultModel
 from repro.core.sa_noise import SANoiseField
+from repro.serving.compiled import CompiledTick, CompiledTickConfig
 from repro.obs import (FlightRecorder, LaunchAuditError, LaunchAuditor,
                        MetricsRegistry, ObsConfig, TraceBuilder)
 from repro.serving.customize import (CustomizationResult,
@@ -72,7 +78,8 @@ from repro.serving.vad import (VADConfig, VADState, frame_energy_db,
                                vad_init, vad_step)
 
 __all__ = [
-    "AdmissionConfig", "CustomizationResult", "CustomizationSession",
+    "AdmissionConfig", "CompiledTick", "CompiledTickConfig",
+    "CustomizationResult", "CustomizationSession",
     "CustomizeConfig", "DecisionConfig", "DecisionOut", "DecisionState",
     "DynamicHopConfig", "FaultConfig", "FaultModel", "FlightRecorder",
     "HealthConfig", "HealthMonitor", "LaunchAuditError", "LaunchAuditor",

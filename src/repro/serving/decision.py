@@ -16,6 +16,10 @@ hops and gates triggers so one utterance fires exactly once:
 
 Everything is batched over streams (leading axis) and mask-aware: the
 scheduler advances only the slots that actually hopped this step.
+``decision_step`` is a pure function of ``(DecisionState, logits, mask)``,
+so the compiled whole-tick fast path (repro.serving.compiled) scans it
+unchanged right behind ``stream_step`` — the decision emitted inside a
+fused K-tick block is bitwise the one the interpreted tick would emit.
 """
 
 from __future__ import annotations

@@ -354,6 +354,12 @@ class StreamServer:
                                      cause="replay")
     _gate_calls = counter_property("serving.batched_calls", cause="gate")
     _profile_swaps = counter_property("serving.profile_swaps")
+    # compiled fast-path accounting (repro.serving.compiled): dispatch
+    # counts only — every Python-tick counter above is replayed exactly,
+    # so these are the ONLY registry keys that differ between a compiled
+    # and an interpreted run (tests/_equiv.py excludes them)
+    _compiled_blocks = counter_property("serving.compiled", what="blocks")
+    _compiled_ticks = counter_property("serving.compiled", what="ticks")
 
     def __init__(self, hw, cfg: kws.KWSConfig, *, hop: int, slots: int = 4,
                  chip_offsets: Optional[Dict[str, jax.Array]] = None,
@@ -368,6 +374,7 @@ class StreamServer:
                  silence_fill: str = "constant",
                  obs: Optional[ObsConfig] = None,
                  device_label: Optional[int] = None,
+                 compiled=None,
                  seed: int = 0):
         # the registry backs every counter attribute — create it before
         # the first counter write below
@@ -474,6 +481,23 @@ class StreamServer:
         self._hop_calls = 0                # batched single-hop calls
         self._replay_calls = 0             # multi-hop wake-replay calls
         self._gate_calls = 0               # masked no-op fill calls
+        self._compiled_blocks = 0
+        self._compiled_ticks = 0
+
+        # compiled whole-tick fast path (repro.serving.compiled):
+        # ``compiled=True`` (defaults) or a CompiledTickConfig turns
+        # steady-state ticks into single-dispatch blocks — ``step()``
+        # serves one-tick blocks, ``step_block()`` up to ``block`` ticks
+        # per dispatch; any tick the block cannot model exactly falls back
+        # to the interpreted path, bit-identically.  Imported lazily
+        # (compiled.py imports _select_state from this module).
+        self._compiled = None
+        if compiled:
+            from repro.serving.compiled import (CompiledTick,
+                                                CompiledTickConfig)
+            ccfg = (compiled if isinstance(compiled, CompiledTickConfig)
+                    else CompiledTickConfig())
+            self._compiled = CompiledTick(self, ccfg)
 
         self._decide = jax.jit(
             lambda dstate, logits, active: dec.decision_step(
@@ -1304,11 +1328,44 @@ class StreamServer:
         return init_mask, init_logits
 
     def step(self) -> List[dict]:
-        """One scheduler tick: SLO shedding, autoscaling, admissions, VAD
-        classification, wake replays, then ONE batched hop over every
-        speech-ready slot and ONE masked no-op fill over every gated slot,
-        then the batched decision update.  Returns this tick's decision
-        events (one per deciding stream; gated hops emit none)."""
+        """One scheduler tick.  Returns this tick's decision events (one
+        per deciding stream; gated hops emit none).
+
+        With ``compiled=`` a steady-state tick runs as a one-tick
+        compiled block (one VAD dispatch + one fused scan dispatch,
+        repro.serving.compiled) and any structural tick — admissions,
+        sheds, resizes, session/health traffic — falls back to the
+        interpreted path; both produce bit-identical events, state and
+        counters (dispatch accounting aside)."""
+        if self._compiled is not None and self._compiled.horizon(1) == 1:
+            return self._compiled.run(1)
+        return self._step_python()
+
+    def step_block(self, max_ticks: Optional[int] = None) -> List[dict]:
+        """Serve up to ``max_ticks`` steady-state ticks in ONE compiled
+        dispatch, returning their concatenated decision events in tick
+        order — bit-identical to calling ``step()`` that many times.
+        The compiled config's ``block`` is a hard per-dispatch cap (it
+        bounds the padded scan length, so jit retraces stay bounded no
+        matter what callers pass); the block also ends early at any
+        structural boundary (``CompiledTick.horizon``).  A tick the
+        compiled path cannot model at all runs interpreted.  Without
+        ``compiled=`` this is exactly one interpreted ``step()``."""
+        if self._compiled is None:
+            return self._step_python()
+        cap = self._compiled.cfg.block
+        k = self._compiled.horizon(cap if max_ticks is None
+                                   else min(max_ticks, cap))
+        if k < 1:
+            return self._step_python()
+        return self._compiled.run(k)
+
+    def _step_python(self) -> List[dict]:
+        """One interpreted scheduler tick: SLO shedding, autoscaling,
+        admissions, VAD classification, wake replays, then ONE batched hop
+        over every speech-ready slot and ONE masked no-op fill over every
+        gated slot, then the batched decision update.  This is the
+        reference semantics the compiled fast path is proven against."""
         tick = self._steps
         t_tick = time.perf_counter()
         if self._audit is not None:
@@ -1570,7 +1627,10 @@ class StreamServer:
             before = (len(self._queue),
                       [None if r is None else len(r.buf)
                        for r in self._slots])
-            events.extend(self.step())
+            # compiled servers drain in whole blocks; tick count and all
+            # serving state stay bit-identical to one-step draining
+            events.extend(self.step() if self._compiled is None
+                          else self.step_block())
             after = (len(self._queue),
                      [None if r is None else len(r.buf)
                       for r in self._slots])
@@ -1833,6 +1893,10 @@ class StreamServer:
         }
         if self._cust is not None:
             out["customization"] = self._cust.stats()
+        if self._compiled is not None:
+            out["compiled"] = {"block": self._compiled.cfg.block,
+                               "blocks": self._compiled_blocks,
+                               "ticks": self._compiled_ticks}
         out["obs"] = {"metrics": len(self._metrics._cells)}
         if self._rec is not None:
             out["obs"]["recorder"] = {"events": len(self._rec),

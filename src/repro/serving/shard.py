@@ -231,6 +231,13 @@ class ShardedStreamServer:
             ev["device"] = d
         return events
 
+    def _block_pool(self, d: int, max_ticks: Optional[int]) -> List[dict]:
+        with jax.default_device(self.devices[d]):
+            events = self.pools[d].step_block(max_ticks)
+        for ev in events:
+            ev["device"] = d
+        return events
+
     def step(self) -> List[dict]:
         """One fleet tick: every pool steps exactly once (sequentially by
         default, one thread per device with ``parallel=True``).  Events
@@ -245,9 +252,31 @@ class ShardedStreamServer:
         self._steps += 1
         return events
 
+    def step_block(self, max_ticks: Optional[int] = None) -> List[dict]:
+        """Serve up to ``max_ticks`` steady-state ticks PER POOL as one
+        compiled dispatch each (``StreamServer.step_block``) — the
+        whole-tick fast path, per device.  Pools advance independently
+        (each fuses as many ticks as its own structural boundaries
+        allow), so unlike ``step()`` this does not keep pools in tick
+        lockstep; per-stream decision sequences are still bit-identical
+        because streams never interact across pools.  Events are
+        returned in device order, tagged with their ``device``.  Pools
+        without ``compiled=`` just run one interpreted tick."""
+        if self._pool_exec is not None:
+            futs = [self._pool_exec.submit(self._block_pool, d, max_ticks)
+                    for d in range(self.n_devices)]
+            events = [ev for f in futs for ev in f.result()]
+        else:
+            events = [ev for d in range(self.n_devices)
+                      for ev in self._block_pool(d, max_ticks)]
+        self._steps += 1
+        return events
+
     def drain(self, max_steps: int = 10_000) -> List[dict]:
-        """Step the fleet until no pool can make progress."""
+        """Step the fleet until no pool can make progress (in compiled
+        blocks when the pools were built with ``compiled=``)."""
         events: List[dict] = []
+        blocks = any(srv._compiled is not None for srv in self.pools)
 
         def view():
             return [(len(srv._queue),
@@ -256,7 +285,7 @@ class ShardedStreamServer:
 
         for _ in range(max_steps):
             before = view()
-            events.extend(self.step())
+            events.extend(self.step_block() if blocks else self.step())
             if view() == before:
                 break
         return events

@@ -53,6 +53,14 @@ kernel** — the shifted-in columns are the folded net's constant
 steady-state response to silent audio (``repro.models.kws.silence_columns``),
 so the state geometry stays hop-exact while the chip sleeps (leakage-only
 in the energy model, ``repro.core.energy.gated_energy_summary``).
+
+Everything here is pure pytree-in / pytree-out over ``StreamState``, which
+is what the compiled whole-tick fast path (repro.serving.compiled) relies
+on: it puts ONE ``stream_step`` / ``gated_step`` pair inside a
+``lax.scan`` body and fuses K ticks into a single dispatch — the scan
+re-issues the same one-launch-per-layer step per tick at run time, so the
+invariant (and bit-identity to K interpreted ticks) is structural, not
+re-proved per block.
 """
 
 from __future__ import annotations

@@ -127,6 +127,26 @@ def vad_step(vcfg: VADConfig, state: VADState, audio: jax.Array,
     return new_state, jnp.where(active, speech, state.speech)
 
 
+def vad_scan(vcfg: VADConfig, state: VADState, audio: jax.Array,
+             active: jax.Array) -> Tuple[VADState, jax.Array]:
+    """Classify K hops in one ``lax.scan``: audio (K, B, hop) + active
+    (K, B) -> (final state, speech flags (K, B)).
+
+    One dispatch for a whole compiled serving block
+    (repro.serving.compiled) instead of K ``vad_step`` calls; the body IS
+    ``vad_step``, so the state trajectory and every flag are bit-identical
+    to K sequential steps (the masked writes also make padded all-inactive
+    rows/steps exact no-ops, which is what lets the block pad K up to a
+    power of two without perturbing the detector)."""
+
+    def body(st, xs):
+        a, act = xs
+        st, flags = vad_step(vcfg, st, a, act)
+        return st, flags
+
+    return jax.lax.scan(body, state, (audio, active))
+
+
 def vad_reset_slot(state: VADState, slot: int) -> VADState:
     """Zero one slot's detector state (stream admission / eviction)."""
     return VADState(level_db=state.level_db.at[slot].set(_FLOOR_DB),

@@ -32,6 +32,7 @@ import numpy as np
 import pytest
 from jax.experimental import pallas as pl
 
+import _equiv as eq
 from repro.core import faults as flt
 from repro.core import imc
 from repro.models import kws as m
@@ -177,11 +178,8 @@ def test_faulted_server_bitexact_vs_delta_riders(folded):
     srv_f.submit("a", wav)
     ev_rider, ev_fault = srv.drain(), srv_f.drain()
     assert len(ev_fault) == 6
-    assert ev_rider == ev_fault
-    l1 = jax.tree_util.tree_leaves(srv._state)
-    l2 = jax.tree_util.tree_leaves(srv_f._state)
-    for x, y in zip(l1, l2):
-        assert np.array_equal(np.asarray(x), np.asarray(y))
+    eq.assert_events_equal(ev_rider, ev_fault, "rider vs fault")
+    eq.assert_leaves_equal(srv._state, srv_f._state, "rider vs fault")
 
     clean = StreamServer(hw, CFG, hop=HOP, slots=2, use_kernel=False,
                          chip_offsets=offs, sa_noise_std=1.5, seed=11)
@@ -362,17 +360,13 @@ def test_snapshot_restore_bit_identical(folded, tmp_path):
         return evs
 
     ev1 = play(srv)
-    leaves1 = [np.asarray(x) for x in jax.tree_util.tree_leaves(srv._state)]
 
     srv2 = mk()
     srv2.restore(path)
     ev2 = play(srv2)
-    leaves2 = [np.asarray(x)
-               for x in jax.tree_util.tree_leaves(srv2._state)]
-    assert ev1 == ev2
-    assert len(leaves1) == len(leaves2)
-    for x, y in zip(leaves1, leaves2):
-        assert np.array_equal(x, y)
+    eq.assert_events_equal(ev1, ev2, "restored vs uninterrupted")
+    eq.assert_leaves_equal(srv._state, srv2._state,
+                           "restored vs uninterrupted")
     assert srv.health.stats() == srv2.health.stats()
     assert srv.faults.stats() == srv2.faults.stats()
 
@@ -511,7 +505,8 @@ def test_duty_aware_hop_widen_faster_when_silent(folded):
     loud = rng.uniform(-1, 1, L + 20 * HOP).astype(np.float32)
     _, ev_knob = run(3, loud, force="speech")
     _, ev_base = run(None, loud, force="speech")
-    assert ev_knob == ev_base           # forced speech: knob is invisible
+    eq.assert_events_equal(ev_knob, ev_base,   # forced speech: the knob
+                           "calm_silence knob")  # is invisible
 
 
 def test_retention_fill_modes(folded):

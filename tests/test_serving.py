@@ -30,6 +30,8 @@ import pytest
 from _hypothesis_shim import given, settings, st
 from jax.experimental import pallas as pl
 
+import _equiv as eq
+
 from repro.core import energy, imc
 from repro.models import kws as m
 from repro.serving import (AdmissionConfig, DecisionConfig,
@@ -260,7 +262,7 @@ def test_batched_admission_one_launch_and_bitexact(folded, monkeypatch):
     assert init_b == 1                      # one wave, one batched call
     ev_s, _, init_s = run(False)
     assert init_s == 4                      # B=1 per admission
-    assert ev_b == ev_s
+    eq.assert_events_equal(ev_b, ev_s, "batched vs sequential init")
 
 
 def test_scheduler_one_fused_launch_per_layer(folded, monkeypatch):
@@ -480,7 +482,7 @@ def test_gated_forced_speech_bitexact_vs_ungated(folded):
 
     ev_plain = run(None)
     ev_forced = run(VADConfig(force="speech"))
-    assert ev_forced == ev_plain
+    eq.assert_events_equal(ev_forced, ev_plain, "forced-speech vs ungated")
     assert len(ev_plain) == 2 * 5
 
 
@@ -552,7 +554,8 @@ def test_wake_margin_replays_keyword_prefix(folded):
     ev_gated, srv = run(VADConfig(threshold_on_db=-40.0,
                                   threshold_off_db=-50.0,
                                   wake_margin=3, hang=0))
-    assert ev_gated == ev_ungated            # every hop decided, bit-equal
+    eq.assert_events_equal(ev_gated, ev_ungated,   # every hop decided,
+                           "wake-margin replay vs ungated")  # bit-equal
     assert any(e["trigger"] for e in ev_gated)
     s = srv.stats()
     assert s["gated_hops"] == 0              # silence stayed within margin

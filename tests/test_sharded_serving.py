@@ -29,6 +29,7 @@ import jax
 import pytest
 from _hypothesis_shim import given, settings, st
 
+import _equiv as eq
 from repro.core import faults as flt
 from repro.core import imc
 from repro.models import kws as m
@@ -60,22 +61,12 @@ def _wav(key, n):
                                          minval=-1, maxval=1), np.float32)
 
 
-def _per_stream(events):
-    """Events grouped per stream, ``device`` tags stripped — the sharded
-    server must match the oracle on everything else, field for field."""
-    out = {}
-    for ev in events:
-        e = {k: v for k, v in ev.items() if k != "device"}
-        out.setdefault(e.pop("stream"), []).append(e)
-    return out
-
-
 def _assert_equiv(ev_oracle, ev_sharded):
-    po, ps = _per_stream(ev_oracle), _per_stream(ev_sharded)
-    assert po.keys() == ps.keys()
-    for sid in po:
-        assert po[sid] == ps[sid], f"stream {sid} diverged"
-    return po
+    # per-stream, device tags stripped — the shared harness's by_stream
+    # mode (tests/_equiv.py): the sharded server must match the oracle
+    # on everything else, field for field
+    return eq.assert_events_equal(ev_oracle, ev_sharded,
+                                  "sharded vs oracle", by_stream=True)
 
 
 # ---------------------------------------------------------------------------
